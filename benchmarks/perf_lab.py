@@ -1,0 +1,113 @@
+"""§Perf hillclimbing lab: lower cell variants, compare roofline terms.
+
+Each variant is a (name, ParallelConfig, kwargs) tuple; results append to
+results/perf/<cell>.json so EXPERIMENTS.md §Perf can show the full
+hypothesis -> change -> before/after log.
+
+  PYTHONPATH=src python -m benchmarks.perf_lab --cell minitron-4b/train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.config import ParallelConfig
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+VARIANTS = {
+    "baseline": lambda: None,   # dryrun defaults
+    "no_seqshard_accum4": lambda: ParallelConfig(
+        seq_shard_activations=False, grad_accum=4),
+    "no_seqshard_accum8": lambda: ParallelConfig(
+        seq_shard_activations=False, grad_accum=8),
+    "seqshard_accum2": lambda: ParallelConfig(grad_accum=2),
+    "seqshard_accum4": lambda: ParallelConfig(grad_accum=4),
+    "no_remat_accum4": lambda: ParallelConfig(
+        seq_shard_activations=False, grad_accum=4, remat=False),
+    # kernel-substituted variants (see repro.models.layers.STUB_KERNELS)
+    "kernel_attn": lambda: _with_stubs(
+        ParallelConfig(seq_shard_activations=False, grad_accum=4),
+        attention=True),
+    "kernel_attn_seqshard": lambda: _with_stubs(ParallelConfig(),
+                                                attention=True),
+    "kernel_ssm": lambda: _with_stubs(ParallelConfig(), ssm=True),
+    "kernel_ssm_accum2": lambda: _with_stubs(ParallelConfig(grad_accum=2),
+                                             ssm=True),
+    "kernel_attn_accum2": lambda: _with_stubs(ParallelConfig(grad_accum=2),
+                                              attention=True),
+    "kernel_attn_ssm": lambda: _with_stubs(ParallelConfig(),
+                                           attention=True, ssm=True),
+    # no tensor parallelism: the model axis joins data parallelism
+    "dp_only": lambda: _dp_only(ParallelConfig(
+        seq_shard_activations=False)),
+    "dp_only_kernel_attn": lambda: _dp_only(_with_stubs(
+        ParallelConfig(seq_shard_activations=False), attention=True)),
+}
+
+
+def _dp_only(parallel):
+    import repro.sharding as SH
+    SH.MODE = "dp_only"
+    return parallel
+
+
+def _with_stubs(parallel, attention=False, ssm=False):
+    from repro.models import layers as L
+    L.STUB_KERNELS["attention"] = attention
+    L.STUB_KERNELS["ssm"] = ssm
+    return parallel
+
+
+def run(cell: str, variants, out_dir="results/perf"):
+    arch, shape = cell.split("/")
+    mesh = make_production_mesh()
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{arch}__{shape}.json"
+    log = json.loads(path.read_text()) if path.exists() else []
+    done = {e["variant"] for e in log}
+    for name in variants:
+        if name in done:
+            print(f"[cached] {name}")
+            continue
+        from repro.models import layers as L
+        import repro.sharding as SH
+        L.STUB_KERNELS["attention"] = False
+        L.STUB_KERNELS["ssm"] = False
+        SH.MODE = "2d"
+        parallel = VARIANTS[name]()
+        print(f"[variant] {name} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape, mesh, "single",
+                             parallel=parallel, extra_tag=name)
+        except Exception as e:
+            print(f"  ERROR {e}")
+            log.append({"variant": name, "status": "error",
+                        "error": str(e)[:500]})
+            path.write_text(json.dumps(log, indent=1))
+            continue
+        rl = rec["roofline"]
+        entry = {"variant": name, "status": rec["status"],
+                 "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+                 "collective_s": rl["collective_s"],
+                 "dominant": rl["dominant"], "mfu": rl["mfu"],
+                 "temp_gib": rec["temp_bytes"] / 2**30,
+                 "arg_gib": rec["argument_bytes"] / 2**30,
+                 "collectives_by_op": rec["collectives_by_op"]}
+        log.append(entry)
+        path.write_text(json.dumps(log, indent=1))
+        print(f"  comp={rl['compute_s']:.2f} mem={rl['memory_s']:.2f} "
+              f"coll={rl['collective_s']:.2f} dom={rl['dominant']} "
+              f"mfu={rl['mfu']:.3f} temp={entry['temp_gib']:.1f}GiB")
+    return log
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variants", default="baseline,no_seqshard_accum4")
+    args = ap.parse_args()
+    run(args.cell, args.variants.split(","))

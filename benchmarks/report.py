@@ -1,0 +1,95 @@
+"""Render EXPERIMENTS.md tables from results/ JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report          # print all sections
+"""
+import json
+from pathlib import Path
+
+from repro.config import SHAPES
+from repro.configs import get_config
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | mesh | compute_s | memory_s | collective_s |"
+            " dominant | MODEL/HLO | MFU | GiB/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for p in sorted(Path("results/dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                        f"| — | *skipped: full-attn 500k* | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                        f"| ERROR: {r.get('error','')[:40]} |")
+            continue
+        rl = r["roofline"]
+        mem = (r["argument_bytes"] + r["temp_bytes"]) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['compute_s']:.3g} | {rl['memory_s']:.3g} "
+            f"| {rl['collective_s']:.3g} | {rl['dominant']} "
+            f"| {rl['useful_flops_ratio']:.2f} | {rl['mfu']:.3f} "
+            f"| {mem:.1f} |")
+    return "\n".join(rows)
+
+
+def dryrun_summary() -> str:
+    ok = sk = err = 0
+    worst = []
+    for p in sorted(Path("results/dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        if r["status"] == "ok":
+            ok += 1
+            worst.append((r["roofline"]["mfu"], f"{r['arch']}/{r['shape']}"
+                          f"/{r['mesh']}"))
+        elif r["status"] == "skipped":
+            sk += 1
+        else:
+            err += 1
+    worst.sort()
+    lines = [f"cells: {ok} compiled ok, {sk} skipped by assignment rule, "
+             f"{err} errors."]
+    return "\n".join(lines)
+
+
+def perf_logs() -> str:
+    out = []
+    for p in sorted(Path("results/perf").glob("*.json")):
+        out.append(f"### {p.stem.replace('__', ' / ')}")
+        out.append("| variant | compute_s | memory_s | collective_s |"
+                   " dominant | MFU | temp GiB |")
+        out.append("|---|---|---|---|---|---|---|")
+        for e in json.loads(p.read_text()):
+            if e.get("status") != "ok":
+                out.append(f"| {e['variant']} | ERROR | | | | | |")
+                continue
+            out.append(f"| {e['variant']} | {e['compute_s']:.3g} "
+                       f"| {e['memory_s']:.3g} | {e['collective_s']:.3g} "
+                       f"| {e['dominant']} | {e['mfu']:.3f} "
+                       f"| {e['temp_gib']:.1f} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def storage_tables() -> str:
+    out = []
+    d = Path("results/storage")
+    for name in ["exp1", "exp2", "exp3", "exp4", "exp5", "exp6", "fig2"]:
+        p = d / f"{name}.json"
+        if not p.exists():
+            continue
+        out.append(f"### {name}")
+        out.append("```json")
+        out.append(json.dumps(json.loads(p.read_text()), indent=1)[:4000])
+        out.append("```")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run summary\n")
+    print(dryrun_summary())
+    print("\n## Roofline table\n")
+    print(roofline_table())
+    print("\n## Perf logs\n")
+    print(perf_logs())

@@ -1,0 +1,51 @@
+"""Train a ~100M-param qwen3-family model for a few hundred steps on the
+local mesh, with mid-run checkpoint + restore (kill-resume drill).
+
+Default runs a reduced step count on CPU; --full does the whole thing.
+
+  PYTHONPATH=src python examples/train_lm.py [--full]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="json 100M params x 300 steps (slow on CPU)")
+    args = ap.parse_args()
+
+    base = get_config("qwen3-1.7b")
+    if args.full:
+        cfg = dataclasses.replace(base, name="qwen3-100m", num_layers=8,
+                                  d_model=512, num_heads=8, num_kv_heads=4,
+                                  head_dim=64, d_ff=2048,
+                                  vocab_size=151936)   # ~100M params
+        steps, batch, seq = 300, 4, 256
+    else:
+        cfg = dataclasses.replace(base, name="qwen3-20m", num_layers=4,
+                                  d_model=256, num_heads=8, num_kv_heads=4,
+                                  head_dim=32, d_ff=1024, vocab_size=32768)
+        steps, batch, seq = 200, 8, 128
+    print(f"model {cfg.name}: ~{cfg.param_count()/1e6:.0f}M params, "
+          f"{steps} steps")
+
+    with tempfile.TemporaryDirectory() as d:
+        # train the first half, "crash", resume from the checkpoint
+        out1 = train_loop(cfg, steps=steps, batch=batch, seq=seq,
+                          ckpt_dir=d, save_every=steps // 4,
+                          fail_at=steps // 2)
+        print(f"restarts: {out1['restarts']}  events: {out1['events']}")
+        first = out1["losses"][0][1]
+        last = out1["losses"][-1][1]
+        print(f"loss {first:.3f} -> {last:.3f} over {out1['final_step']} "
+              f"steps ({out1['wall_s']:.0f}s)")
+        assert last < first, "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""YCSB head-to-head: HHZS vs the best basic scheme vs SpanDB-AUTO.
+
+A reduced version of Exp#1 (paper Fig.5): fresh load per scheme, then
+workloads A and C.  Expect HHZS highest throughput, with the gap widest
+on read-heavy workloads (migration + hinted cache).
+
+  PYTHONPATH=src python examples/ycsb_demo.py
+"""
+from repro.lsm import DB, ScenarioConfig
+from repro.workloads import YCSB, run_load, run_workload
+
+
+def main():
+    n = ScenarioConfig().paper_keys // 4          # quick demo sizing
+    results = {}
+    for scheme in ["B3", "AUTO", "HHZS"]:
+        db = DB(scheme)
+        load = run_load(db, n_keys=n)
+        db.flush_all()
+        row = {"load": load.throughput}
+        for wl in ["A", "C"]:
+            r = run_workload(db, YCSB[wl], n_ops=4000, n_keys=n)
+            row[wl] = r.throughput
+        results[scheme] = row
+        print(f"{scheme:5s} load={row['load']:8.1f}  "
+              f"A={row['A']:6.2f}  C={row['C']:6.2f}  (sim OPS)")
+    for wl in ["A", "C"]:
+        gain = results["HHZS"][wl] / results["B3"][wl] - 1
+        print(f"HHZS vs B3 on {wl}: {gain*100:+.0f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""HHZS reproduction: hinted LSM-tree data management on hybrid zoned
+storage (Li/Wang/Lee 2022), as a multi-pod JAX training/serving framework.
+
+Subpackages: core (the paper's contribution), zoned, lsm, workloads
+(reproduction); models, sharding, kernels, serving, launch, checkpoint,
+data, ft, optim (TPU framework); roofline (dry-run analysis).
+"""
+__version__ = "1.0.0"

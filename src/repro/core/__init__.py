@@ -1,0 +1,26 @@
+"""The paper's contribution: hinted data management for hybrid zoned storage.
+
+- ``hints``         hint vocabulary (§3.1)
+- ``placement``     write-guided data placement + baselines (§3.3, §2.3, §4.1)
+- ``migration``     workload-aware migration (§3.4)
+- ``hinted_cache``  application-hinted caching (§3.5)
+- ``middleware``    the HHZS middleware gluing the above onto zoned devices
+
+The same placement/migration/caching machinery is reused by
+``repro.serving.tiering`` to manage paged KV-cache blocks across HBM and
+host memory on TPU — see DESIGN.md §Hardware-adaptation.
+"""
+from .hints import (FlushHint, CompactionTriggerHint, CompactionOutputHint,
+                    CompactionDoneHint, CacheHint)
+from .placement import (PlacementPolicy, BasicScheme, AutoPlacement,
+                        HHZSPlacement)
+from .migration import Migrator, priority_key
+from .hinted_cache import HintedCache
+from .middleware import HybridZonedBackend
+
+__all__ = [
+    "FlushHint", "CompactionTriggerHint", "CompactionOutputHint",
+    "CompactionDoneHint", "CacheHint",
+    "PlacementPolicy", "BasicScheme", "AutoPlacement", "HHZSPlacement",
+    "Migrator", "priority_key", "HintedCache", "HybridZonedBackend",
+]

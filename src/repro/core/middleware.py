@@ -1,0 +1,390 @@
+"""HHZS middleware: bridges the LSM-tree KV store and hybrid zoned storage.
+
+Owns both zoned devices, the zone organization of §3.2 (reserved WAL/cache
+zones on the SSD, SST zones elsewhere), the WAL manager, and — when enabled —
+the workload-aware migrator (§3.4) and application-hinted cache (§3.5).
+Placement decisions are delegated to a ``PlacementPolicy`` (§3.3 / baselines).
+
+SST sizing follows the paper: one SST fits a single SSD zone (93.9% of the
+1077 MiB zone capacity) or spans four HDD zones.  All I/O paths are simulator
+generators so queueing interference between foreground reads and background
+flush/compaction/migration traffic is modelled faithfully.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Optional, Set, TYPE_CHECKING
+
+from ..zoned.device import MiB, Zone, ZonedDevice, ZoneState
+from ..zoned.sim import Sim
+from .hinted_cache import HintedCache
+from .hints import CacheHint
+from .migration import Migrator
+from .placement import PlacementPolicy
+
+if TYPE_CHECKING:
+    from ..lsm.sstable import SST
+
+SSD, HDD = "ssd", "hdd"
+_CHUNK = int(1 * MiB)
+
+
+class HybridZonedBackend:
+    def __init__(self, sim: Sim, ssd: ZonedDevice, hdd: ZonedDevice,
+                 placement: PlacementPolicy,
+                 wal_cache_zones: int = 2,
+                 block_size: int = 4096,
+                 enable_migration: bool = False,
+                 enable_cache: bool = False,
+                 migration_rate: float = 4 * MiB,
+                 io_chunk: int = int(1 * MiB),
+                 basic_migration_low_levels: Optional[int] = None,
+                 hdd_rate_window: float = 10.0):
+        self.sim = sim
+        self.ssd = ssd
+        self.hdd = hdd
+        self.placement = placement
+        self.block_size = block_size
+        self.io_chunk = io_chunk
+        placement.attach(self)
+
+        # ---- zone organization (§3.2) ---------------------------------
+        self.reserve_zids: Set[int] = set()
+        if placement.reserves_wal:
+            carved = [ssd.alloc_zone("reserve-free")
+                      for _ in range(wal_cache_zones)]
+            for z in carved:
+                # keep it EMPTY but remembered as reserved
+                ssd.reset_zone(z)
+                self.reserve_zids.add(z.zid)
+
+        # ---- SST registry ----------------------------------------------
+        self.ssts: Dict[int, "SST"] = {}
+        self._ssd_level_counts: Dict[int, int] = defaultdict(int)
+
+        # ---- WAL state --------------------------------------------------
+        self._wal_records: List[dict] = []   # {zone, dev, gens:set}
+        self._cur_wal: Optional[dict] = None
+        self._wal_waiters: List = []
+        # WAL-full backpressure hook (the LSM-tree forces a memtable switch
+        # + flush, as RocksDB does when max_total_wal_size is hit)
+        self.wal_pressure_cb = None
+        # group commit: concurrent writers batch into one WAL I/O
+        self._wal_queue: List[tuple] = []
+        self._wal_writer_running = False
+
+        # ---- optional components ---------------------------------------
+        self.cache: Optional[HintedCache] = (
+            HintedCache(self, block_size) if enable_cache else None)
+        self.migrator: Optional[Migrator] = (
+            Migrator(self, rate_limit=migration_rate, chunk_bytes=io_chunk,
+                     basic_low_levels=basic_migration_low_levels)
+            if enable_migration else None)
+
+        # ---- read-rate window for popularity migration ------------------
+        self._hdd_window = hdd_rate_window
+        self._hdd_buckets: Dict[int, int] = defaultdict(int)
+
+        # ---- stats -------------------------------------------------------
+        self.stats = defaultdict(float)
+
+    def start(self) -> None:
+        self.placement.start()
+        if self.migrator is not None:
+            self.migrator.start()
+
+    # ==================================================================
+    # zone pool queries used by placement / migration
+    # ==================================================================
+    def device_of(self, tier: str) -> ZonedDevice:
+        return self.ssd if tier == SSD else self.hdd
+
+    def zone_bytes(self, tier: str) -> int:
+        return self.device_of(tier).zone_capacity
+
+    def c_ssd(self) -> int:
+        """SSD zones available for SSTs (total minus reserved WAL/cache)."""
+        return len(self.ssd.zones) - len(self.reserve_zids)
+
+    def ssd_has_empty_sst_zone(self) -> bool:
+        return any(z.state == ZoneState.EMPTY and z.zid not in self.reserve_zids
+                   for z in self.ssd.zones)
+
+    def ssd_empty_sst_zones(self) -> int:
+        return sum(1 for z in self.ssd.zones
+                   if z.state == ZoneState.EMPTY and z.zid not in self.reserve_zids)
+
+    def ssd_sst_count_at_level(self, level: int) -> int:
+        return self._ssd_level_counts.get(level, 0)
+
+    def ssd_ssts(self) -> List["SST"]:
+        return [s for s in self.ssts.values() if s.tier == SSD]
+
+    def hdd_ssts(self) -> List["SST"]:
+        return [s for s in self.ssts.values() if s.tier == HDD]
+
+    # ==================================================================
+    # hint entry point (LSM-tree -> middleware)
+    # ==================================================================
+    def on_hint(self, hint) -> None:
+        self.placement.on_hint(hint)
+
+    # ==================================================================
+    # SST I/O
+    # ==================================================================
+    def alloc_sst_zones(self, tier: str, size_bytes: int,
+                        owner: str) -> Optional[List[Zone]]:
+        dev = self.device_of(tier)
+        need = -(-size_bytes // dev.zone_capacity)
+        free = [z for z in dev.zones
+                if z.state == ZoneState.EMPTY
+                and (tier == HDD or z.zid not in self.reserve_zids)]
+        if len(free) < need:
+            return None
+        zones = free[:need]
+        for z in zones:
+            z.state = ZoneState.OPEN
+            z.owner = owner
+        return zones
+
+    def write_sst(self, sst: "SST", source: str):
+        """Generator: place (per policy) and sequentially write a new SST."""
+        tier = self.placement.choose_tier(sst.level, source)
+        zones = self.alloc_sst_zones(tier, sst.size_bytes, f"sst:{sst.sid}")
+        if zones is None and tier == SSD:
+            tier = HDD
+            zones = self.alloc_sst_zones(HDD, sst.size_bytes, f"sst:{sst.sid}")
+        if zones is None:
+            raise RuntimeError("HDD out of zones — size the simulation larger")
+        sst.tier = tier
+        sst.zones = zones
+        sst.birth = self.sim.now
+        self._register(sst)
+        # lock while the write streams: the SST is registered (placement
+        # must see its zones as allocated) but the migrator must not move
+        # a half-written SST
+        sst.locked = True
+        try:
+            dev = self.device_of(tier)
+            total = sst.size_bytes
+            done = 0
+            zi = 0
+            tag = f"L{sst.level}"
+            while done < total:
+                n = min(self.io_chunk, total - done)
+                rem = n
+                while rem > 0:
+                    zone = zones[zi]
+                    take = min(rem, zone.remaining)
+                    if take == 0:
+                        zi += 1
+                        continue
+                    yield dev.append(zone, take, tag=tag)
+                    rem -= take
+                done += n
+        finally:
+            sst.locked = False
+
+    def delete_sst(self, sst: "SST") -> None:
+        """SST removed by compaction: reset its zones (space reclaim)."""
+        self._unregister(sst)
+        dev = self.device_of(sst.tier)
+        for z in sst.zones:
+            dev.reset_zone(z)
+        sst.zones = []
+        if self.cache is not None:
+            self.cache.drop_sst(sst.sid)
+        self._wake_wal_waiters()
+
+    def relocate(self, sst: "SST", new_tier: str, new_zones: List[Zone]) -> None:
+        """Migration finished: flip tiers, reset source zones."""
+        old_dev = self.device_of(sst.tier)
+        for z in sst.zones:
+            old_dev.reset_zone(z)
+        if sst.tier == SSD:
+            self._ssd_level_counts[sst.level] -= 1
+        sst.tier = new_tier
+        sst.zones = new_zones
+        if new_tier == SSD:
+            self._ssd_level_counts[sst.level] += 1
+            # cached copies of now-SSD-resident blocks are redundant
+            if self.cache is not None:
+                self.cache.drop_sst(sst.sid)
+        self._wake_wal_waiters()
+
+    def note_level_change(self, sst: "SST", new_level: int) -> None:
+        if sst.tier == SSD:
+            self._ssd_level_counts[sst.level] -= 1
+            self._ssd_level_counts[new_level] += 1
+        sst.level = new_level
+
+    def _register(self, sst: "SST") -> None:
+        self.ssts[sst.sid] = sst
+        if sst.tier == SSD:
+            self._ssd_level_counts[sst.level] += 1
+
+    def _unregister(self, sst: "SST") -> None:
+        self.ssts.pop(sst.sid, None)
+        if sst.tier == SSD:
+            self._ssd_level_counts[sst.level] -= 1
+
+    # ------------------------------------------------------------------
+    def read_block(self, sst: "SST", block_idx: int):
+        """Generator: read one data block; SSD cache zones checked first."""
+        sst.num_reads += 1
+        if sst.tier == HDD and self.cache is not None \
+                and self.cache.lookup(sst.sid, block_idx):
+            self.cache.record_hit()
+            self.stats["ssd_cache_hits"] += 1
+            yield self.ssd.io(self.block_size, "rand_read", tag="cache")
+            return "ssd-cache"
+        dev = self.device_of(sst.tier)
+        if sst.tier == HDD:
+            self._hdd_buckets[int(self.sim.now)] += 1
+            self.stats["hdd_block_reads"] += 1
+        else:
+            self.stats["ssd_block_reads"] += 1
+        yield dev.io(self.block_size, "rand_read", tag=f"L{sst.level}")
+        return sst.tier
+
+    def on_block_evicted(self, sst: Optional[SST], block_idx: int) -> None:
+        """Cache hint (§3.5): fire-and-forget admission into cache zones."""
+        if self.cache is None or sst is None:
+            return
+        self.on_hint(CacheHint(sst_id=sst.sid, block_idx=block_idx))
+        self.sim.process(self.cache.admit(sst.sid, block_idx, sst.tier))
+
+    def hdd_read_rate(self) -> float:
+        now = int(self.sim.now)
+        w = int(self._hdd_window)
+        total = sum(self._hdd_buckets.get(now - i, 0) for i in range(w))
+        # prune old buckets occasionally
+        if len(self._hdd_buckets) > 4 * w:
+            for k in [k for k in self._hdd_buckets if k < now - 2 * w]:
+                del self._hdd_buckets[k]
+        return total / max(self._hdd_window, 1e-9)
+
+    # ==================================================================
+    # WAL manager
+    # ==================================================================
+    def wal_zones_in_use(self) -> int:
+        return len(self._wal_records)
+
+    def acquire_reserved_zone(self, kind: str) -> Optional[Zone]:
+        for z in self.ssd.zones:
+            if z.zid in self.reserve_zids and z.state == ZoneState.EMPTY:
+                z.state = ZoneState.OPEN
+                z.owner = kind
+                return z
+        return None
+
+    def release_reserved_zone(self, zone: Zone) -> None:
+        self.ssd.reset_zone(zone)
+        self._wake_wal_waiters()
+
+    def _wal_new_zone(self) -> Optional[dict]:
+        if self.placement.reserves_wal:
+            zone = self.acquire_reserved_zone("wal")
+            if zone is None and self.cache is not None and self.cache.zones:
+                # WAL pressure evicts cache zones (§3.5 cache eviction)
+                self.cache.evict_oldest_zone()
+                zone = self.acquire_reserved_zone("wal")
+            if zone is None:
+                return None
+            dev = self.ssd
+        else:
+            # basic schemes: any empty SSD zone, else HDD (§2.3)
+            zone = None
+            for z in self.ssd.zones:
+                if z.state == ZoneState.EMPTY:
+                    zone, dev = z, self.ssd
+                    break
+            if zone is None:
+                for z in self.hdd.zones:
+                    if z.state == ZoneState.EMPTY:
+                        zone, dev = z, self.hdd
+                        break
+            if zone is None:
+                return None
+            zone.state = ZoneState.OPEN
+            zone.owner = "wal"
+        rec = {"zone": zone, "dev": dev, "gens": set()}
+        self._wal_records.append(rec)
+        return rec
+
+    def wal_append(self, nbytes: int):
+        """Generator: append a log record (group-committed with concurrent
+        writers, as RocksDB batches WAL writes from its write group).
+
+        Returns the WAL zone records the batch landed in; the caller
+        attributes its MemTable generation to them *after* inserting
+        (attribution at enqueue time is wrong: the memtable can rotate —
+        or even flush — while the write sits in the group-commit queue,
+        leaving phantom generations that pin WAL zones forever)."""
+        ev = self.sim.event()
+        self._wal_queue.append((nbytes, ev))
+        if not self._wal_writer_running:
+            self._wal_writer_running = True
+            self.sim.process(self._wal_writer())
+        records = yield ev
+        return records
+
+    def wal_attribute(self, records, gen: int) -> None:
+        for rec in records:
+            rec["gens"].add(gen)
+
+    def _wal_writer(self):
+        try:
+            while self._wal_queue:
+                batch, self._wal_queue = self._wal_queue, []
+                total = sum(n for n, _ in batch)
+                touched = []
+                while total > 0:
+                    rec = self._cur_wal
+                    if rec is None or rec["zone"].remaining <= 0:
+                        rec = self._wal_new_zone()
+                        if rec is None:
+                            # stall until a flush or zone reset frees WAL
+                            # space; signal pressure so the tree force-flushes
+                            if self.wal_pressure_cb is not None:
+                                self.wal_pressure_cb()
+                            ev = self.sim.event()
+                            self._wal_waiters.append(ev)
+                            self.stats["wal_stalls"] += 1
+                            yield ev
+                            continue
+                        self._cur_wal = rec
+                    take = min(total, rec["zone"].remaining)
+                    if rec not in touched:
+                        touched.append(rec)
+                    yield rec["dev"].append(rec["zone"], take, tag="wal")
+                    total -= take
+                for _, ev in batch:
+                    ev.succeed(touched)
+        finally:
+            self._wal_writer_running = False
+
+    def wal_flushed(self, gens: Set[int]) -> None:
+        """MemTable generations persisted as SSTs: their WAL data is dead."""
+        kept = []
+        for rec in self._wal_records:
+            rec["gens"] -= gens
+            full = rec["zone"].remaining <= 0
+            # the current zone is also reclaimable once it is full + dead
+            reclaim = not rec["gens"] and (rec is not self._cur_wal or full)
+            if reclaim:
+                if rec is self._cur_wal:
+                    self._cur_wal = None
+                if self.placement.reserves_wal:
+                    self.release_reserved_zone(rec["zone"])
+                else:
+                    rec["dev"].reset_zone(rec["zone"])
+            else:
+                kept.append(rec)
+        self._wal_records = kept
+        self._wake_wal_waiters()
+
+    def _wake_wal_waiters(self) -> None:
+        waiters, self._wal_waiters = self._wal_waiters, []
+        for ev in waiters:
+            ev.succeed()

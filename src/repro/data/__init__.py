@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, FileTokens, Prefetcher
+
+__all__ = ["SyntheticLM", "FileTokens", "Prefetcher"]

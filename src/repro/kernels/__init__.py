@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel package ships <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper), ref.py (pure-jnp oracle); all are
+validated against their oracles in interpret mode (tests/test_kernels.py).
+"""

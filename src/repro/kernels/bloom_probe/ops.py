@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the Bloom probe kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .bloom_probe import bloom_probe
+
+
+def _is_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("k_hashes", "interpret"))
+def probe(keys, bits, k_hashes: int = 7, interpret: Optional[bool] = None):
+    interp = (not _is_tpu()) if interpret is None else interpret
+    return bloom_probe(keys, bits, k_hashes=k_hashes, interpret=interp)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the Bloom probe + filter construction."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_MUL1 = jnp.uint32(0x85EBCA6B)
+_MUL2 = jnp.uint32(0xC2B2AE35)
+
+
+def _mix(x, seed):
+    x = x ^ seed
+    x = (x ^ (x >> 16)) * _MUL1
+    x = (x ^ (x >> 13)) * _MUL2
+    return x ^ (x >> 16)
+
+
+def build_filter(keys: jnp.ndarray, num_words: int,
+                 k_hashes: int = 7) -> jnp.ndarray:
+    """Insert keys into a packed uint32 bit array (jnp, for the oracle).
+
+    Bits are set on a flat bool array (duplicate scatter indices all write
+    True, so no read-modify-write races) and packed into uint32 words."""
+    flat = jnp.zeros((num_words * 32,), bool)
+    for i in range(k_hashes):
+        h = _mix(keys.astype(jnp.uint32), jnp.uint32((0x9E3779B9 * (i + 1)) & 0xFFFFFFFF))
+        word = ((h >> 5) % jnp.uint32(num_words)).astype(jnp.int32)
+        bit = (h & jnp.uint32(31)).astype(jnp.int32)
+        flat = flat.at[word * 32 + bit].set(True)
+    lanes = flat.reshape(num_words, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(lanes * weights, axis=-1, dtype=jnp.uint32)
+
+
+def bloom_probe_ref(keys: jnp.ndarray, bits: jnp.ndarray,
+                    k_hashes: int = 7) -> jnp.ndarray:
+    hit = jnp.ones(keys.shape, jnp.int32)
+    for i in range(k_hashes):
+        h = _mix(keys.astype(jnp.uint32), jnp.uint32((0x9E3779B9 * (i + 1)) & 0xFFFFFFFF))
+        word = ((h >> 5) % jnp.uint32(bits.shape[0])).astype(jnp.int32)
+        bit = h & jnp.uint32(31)
+        hit &= ((bits[word] >> bit) & jnp.uint32(1)).astype(jnp.int32)
+    return hit

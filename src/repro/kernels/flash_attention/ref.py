@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (dense softmax attention)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q: [B, H, S, D]; k/v: [B, KV, S, D] -> [B, H, S, D]. fp32 softmax."""
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, kvh, g, sq, d)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)

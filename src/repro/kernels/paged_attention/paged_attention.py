@@ -1,0 +1,124 @@
+"""Paged decode attention for TPU (block-table indirection in the kernel).
+
+The KV cache lives in a paged pool [num_pages, page_size, KV, D] managed by
+the HHZS-style tier manager (repro.serving); each sequence owns a list of
+pages via a block table.  The kernel grid is (batch, kv_head, page_slot):
+page indices arrive via PrefetchScalarGridSpec so the BlockSpec index_map
+can gather the right page of K/V into VMEM while the previous page computes
+(the classic TPU paged-attention structure; vLLM's GPU kernel uses shared
+memory + warps, here the insight maps to scalar-prefetch + VMEM tiles).
+
+Online softmax accumulates across page slots in VMEM scratch.  Pages past a
+sequence's length contribute nothing (masked); because block tables pad
+with page 0, the gather stays in-bounds.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scratch, l_scratch, acc_scratch, *,
+                   page_size, num_slots, scale):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0]                      # [G, D]
+    k = k_ref[0, 0]                      # [page_size, D]
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # mask positions beyond the sequence length
+    ctx = lens_ref[b]
+    pos = si * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(pos <= ctx, s, NEG_INF)
+
+    m_prev = m_scratch[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scratch[...] = alpha * l_scratch[...] + jnp.sum(p, axis=-1,
+                                                      keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scratch[...] = m_new
+
+    @pl.when(si == num_slots - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scratch[...]
+                       / jnp.maximum(l_scratch[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                           context_lens: jnp.ndarray, *,
+                           interpret: bool = False) -> jnp.ndarray:
+    """One-token decode with paged KV.
+
+    q: [B, H, D]; k_pages/v_pages: [P, page_size, KV, D];
+    block_tables: [B, max_pages] int32 (pad with 0);
+    context_lens: [B] int32 (index of the newest valid token).
+    Returns [B, H, D].
+    """
+    bsz, h, d = q.shape
+    npages, page_size, kvh, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    g = h // kvh
+    scale = 1.0 / np.sqrt(d)
+
+    # [B, KV, G, D] so each (batch, kv head) program sees its G queries
+    qr = q.reshape(bsz, kvh, g, d)
+    # flatten pages per kv head: [KV, P, page_size, D]
+    kp = k_pages.transpose(2, 0, 1, 3)
+    vp = v_pages.transpose(2, 0, 1, 3)
+
+    kernel = functools.partial(
+        _decode_kernel, page_size=page_size, num_slots=max_pages,
+        scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_tables, context_lens
+        grid=(bsz, kvh, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b, hi, si, tables, lens: (b, hi, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, hi, si, tables, lens:
+                         (hi, tables[b, si], 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, hi, si, tables, lens:
+                         (hi, tables[b, si], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b, hi, si, tables, lens:
+                               (b, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, qr, kp, vp)
+    return out.reshape(bsz, h, d)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for paged decode attention: gather pages, dense attn."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
+    """q: [B, H, D]; pages [P, ps, KV, D]; tables [B, MP]; lens [B]."""
+    bsz, h, d = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    mp = block_tables.shape[1]
+    g = h // kvh
+    # gather each sequence's pages -> [B, MP*ps, KV, D]
+    k = k_pages[block_tables].reshape(bsz, mp * ps, kvh, d)
+    v = v_pages[block_tables].reshape(bsz, mp * ps, kvh, d)
+    qr = q.reshape(bsz, kvh, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    pos = jnp.arange(mp * ps)[None, None, None, :]
+    s = jnp.where(pos <= context_lens[:, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(bsz, h, d).astype(q.dtype)

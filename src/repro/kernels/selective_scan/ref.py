@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the selective scan (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt, bx, c, a):
+    """dt: [B,T,di]; bx: [B,T,di,N]; c: [B,T,N]; a: [di,N] -> y [B,T,di]."""
+    b, t, di = dt.shape
+    n = a.shape[-1]
+
+    def step(h, xs):
+        dt_t, bx_t, c_t = xs                       # [B,di], [B,di,N], [B,N]
+        decay = jnp.exp(dt_t[..., None] * a)
+        h = h * decay + bx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    xs = (dt.transpose(1, 0, 2), bx.transpose(1, 0, 2, 3),
+          c.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2)

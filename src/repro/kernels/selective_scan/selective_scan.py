@@ -1,0 +1,84 @@
+"""Mamba-1 selective scan kernel for TPU (pl.pallas_call + BlockSpec).
+
+The recurrence h_t = exp(dt_t * A) h_t-1 + dt_t B_t x_t is sequential in t
+but parallel over (batch, d_inner, state).  The grid is
+(batch, d_inner blocks, seq chunks) with the chunk dim innermost
+("arbitrary"): the [block_d, N] state carries across chunk iterations in
+VMEM scratch while each chunk's [chunk, block_d] inputs stream through VMEM
+tiles — the HBM->VMEM->VREG blocking a GPU implementation gets from
+registers + shared memory.
+
+Inside a chunk the scan runs as an unrolled fori_loop over time steps on
+the VPU (elementwise ops; there is no matmul here, the MXU idles — this
+kernel is bandwidth-bound by design, see the roofline notes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, bx_ref, c_ref, a_ref, y_ref, h_scratch, *,
+                 chunk, n_state):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    a = a_ref[...]                         # [block_d, N]
+    dt = dt_ref[0]                         # [chunk, block_d]
+    bx = bx_ref[0]                         # [chunk, block_d, N]
+    c = c_ref[0]                           # [chunk, N]
+
+    def step(t, carry):
+        h, ys = carry
+        decay = jnp.exp(dt[t][:, None] * a)          # [block_d, N]
+        h = h * decay + bx[t]                        # [block_d, N]
+        y_t = jnp.sum(h * c[t][None, :], axis=-1)    # [block_d]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y_t, t, 0)
+        return h, ys
+
+    h0 = h_scratch[...]
+    ys0 = jnp.zeros((chunk, a.shape[0]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    h_scratch[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+def selective_scan(dt: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray,
+                   a: jnp.ndarray, *, block_d: int = 256, chunk: int = 64,
+                   interpret: bool = False) -> jnp.ndarray:
+    """dt: [B, T, di] fp32; bx: [B, T, di, N] fp32; c: [B, T, N] fp32;
+    a: [di, N] fp32 (negative). Returns y [B, T, di] fp32."""
+    b, t, di = dt.shape
+    n = a.shape[-1]
+    block_d = min(block_d, di)
+    chunk = min(chunk, t)
+    assert di % block_d == 0 and t % chunk == 0
+    nd, nc = di // block_d, t // chunk
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_state=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d),
+                         lambda bi, d, ci: (bi, ci, d)),
+            pl.BlockSpec((1, chunk, block_d, n),
+                         lambda bi, d, ci: (bi, ci, d, 0)),
+            pl.BlockSpec((1, chunk, n),
+                         lambda bi, d, ci: (bi, ci, 0)),
+            pl.BlockSpec((block_d, n),
+                         lambda bi, d, ci: (d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d),
+                               lambda bi, d, ci: (bi, ci, d)),
+        out_shape=jax.ShapeDtypeStruct((b, t, di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, bx, c, a)

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init), which is why the docstring sits below them.
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the appropriate step function (train_step for
+train shapes, prefill/serve steps for inference shapes) with ShapeDtypeStruct
+inputs and NamedShardings on the production mesh, compiles it, and records
+memory_analysis / cost_analysis / parsed collective bytes for §Dry-run and
+§Roofline of EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmoe-1b-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import roofline as R
+from .. import sharding as SH
+from ..config import SHAPES, ParallelConfig, TrainConfig
+from ..configs import get_config, list_configs
+from ..models import steps as S
+from . import specs as SP
+from .mesh import make_production_mesh
+
+
+def skip_reason(cfg, shape) -> str:
+    """Cells that are skipped by assignment rules (documented in DESIGN.md)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 500k-token dense KV decode is "
+                "intentionally unsupported (sub-quadratic archs only)")
+    return ""
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               fsdp: bool = True, extra_tag: str = "",
+               parallel: ParallelConfig = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": int(np.prod(list(mesh.shape.values()))),
+           "tag": extra_tag}
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    if parallel is None:
+        # production default: microbatch the giant models' train step so
+        # per-microbatch activations fit 16 GB HBM alongside params+opt
+        accum = 2 if (cfg.d_model >= 6144 and shape.kind == "train") else 1
+        parallel = ParallelConfig(grad_accum=accum)
+    constraint = SH.activation_constraint(
+        mesh, seq_shard=parallel.seq_shard_activations)
+    t0 = time.time()
+    specs = SP.input_specs(cfg, shape)
+    if shape.kind == "train":
+        step = S.make_train_step(cfg, TrainConfig(), parallel,
+                                 constraint=constraint)
+        state_spec = SH.state_specs(mesh, cfg, specs["state"], fsdp=fsdp)
+        batch_spec = SH.batch_specs(mesh, cfg, shape)
+        in_shardings = (SH.named(mesh, state_spec),
+                        SH.named(mesh, batch_spec))
+        out_shardings = (SH.named(mesh, state_spec),
+                         NamedSharding(mesh, P()))
+        args = (specs["state"],
+                {k: v for k, v in specs["batch"].items()})
+    elif shape.kind == "prefill":
+        step = S.make_prefill_step(cfg, parallel, constraint=constraint)
+        # ZeRO-style inference sharding: weights 2D-sharded, gathered per
+        # layer — required to fit >=34B params on 16 GB chips
+        pspec = SH.param_specs(mesh, cfg, specs["params"], fsdp=fsdp)
+        batch_spec = SH.batch_specs(mesh, cfg, shape)
+        in_shardings = (SH.named(mesh, pspec), SH.named(mesh, batch_spec))
+        out_shardings = NamedSharding(
+            mesh, P(SH.data_axes(mesh),
+                    SH.maybe(mesh, "model", cfg.vocab_size)))
+        args = (specs["params"], specs["batch"])
+    else:  # decode
+        step = S.make_serve_step(cfg)
+        pspec = SH.param_specs(mesh, cfg, specs["params"], fsdp=fsdp)
+        cspec = SH.cache_specs(mesh, cfg, specs["caches"])
+        dp = SH.data_axes(mesh)
+        tok_s = NamedSharding(mesh, P(SH.maybe(mesh, dp,
+                                               shape.global_batch), None))
+        len_s = NamedSharding(mesh, P(SH.maybe(mesh, dp,
+                                               shape.global_batch)))
+        in_shardings = (SH.named(mesh, pspec), tok_s, len_s,
+                        SH.named(mesh, cspec))
+        out_shardings = (tok_s,
+                         NamedSharding(
+                             mesh, P(SH.maybe(mesh, dp, shape.global_batch),
+                                     None,
+                                     SH.maybe(mesh, "model",
+                                              cfg.vocab_size))),
+                         SH.named(mesh, cspec))
+        args = (specs["params"], specs["token"], specs["cache_len"],
+                specs["caches"])
+
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         out_shardings=out_shardings)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    default_group = mesh.shape.get("model", 1)
+    # own HLO walk: XLA's cost_analysis counts while-loop bodies once
+    st = R.analyze_hlo(hlo, default_group, default_trip=cfg.num_layers)
+    colls = R.CollectiveStats(total_bytes=st.collective_bytes,
+                              by_op=st.coll_by_op, counts=st.coll_counts)
+    rl = R.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=rec["chips"],
+        flops_per_device=st.flops,
+        bytes_per_device=st.bytes_hbm,
+        collective_bytes=colls.total_bytes,
+        model_flops_total=R.model_flops(cfg, shape),
+        memory_per_device=float(
+            getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0)),
+    )
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "xla_cost_analysis": {
+            "flops_loop_body_once": float(ca.get("flops", 0.0)),
+            "bytes_loop_body_once": float(ca.get("bytes accessed", 0.0))},
+        "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+        "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+        "collectives_by_op": {k: round(v) for k, v in colls.by_op.items()},
+        "collective_counts": colls.counts,
+        "roofline": rl.to_dict(),
+    })
+    return rec
+
+
+def run_cells(archs, shapes, meshes, out_dir: Path, fsdp: bool = True,
+              resume: bool = True) -> list:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                path = out_dir / f"{tag}.json"
+                if resume and path.exists():
+                    results.append(json.loads(path.read_text()))
+                    print(f"[cached] {tag}")
+                    continue
+                print(f"[lower+compile] {tag} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape_name, mesh, mesh_name,
+                                     fsdp=fsdp)
+                except Exception as e:        # record, keep going
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                path.write_text(json.dumps(rec, indent=1))
+                results.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    rl = rec["roofline"]
+                    extra = (f" dominant={rl['dominant']} "
+                             f"mfu={rl['mfu']:.3f} "
+                             f"mem/dev={rec['argument_bytes']/2**30:.2f}GiB"
+                             f"+tmp{rec['temp_bytes']/2**30:.2f}GiB "
+                             f"compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"  -> {status}{extra}", flush=True)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = run_cells(archs, shapes, meshes, Path(args.out),
+                        fsdp=not args.no_fsdp, resume=not args.no_resume)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    err = [r for r in results if r["status"] == "error"]
+    print(f"\n=== dry-run: {ok} ok, {sk} skipped, {len(err)} errors "
+          f"of {len(results)} cells ===")
+    for r in err:
+        print(f"  ERROR {r['arch']} {r['shape']} {r['mesh']}: {r['error']}")
+    return 1 if err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run currency).
+
+``input_specs(cfg, shape)`` returns the kwargs for lowering the step
+function of that shape kind:
+  train   -> {"state", "batch"}                          for train_step
+  prefill -> {"params", "batch"}                         for prefill_step
+  decode  -> {"params", "token", "cache_len", "caches"}  for serve_step
+
+Modality frontends are stubs per the assignment: whisper gets precomputed
+frame embeddings, internvl gets patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig, ShapeSpec
+from ..models import model as M
+from ..models import steps as S
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs_shapes(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        batch["targets"] = sds((b, s), jnp.int32)
+    if cfg.encoder_layers:
+        batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model),
+                              jnp.bfloat16)
+    if cfg.vision_prefix:
+        batch["vision_embeds"] = sds((b, cfg.vision_prefix, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = batch_specs_shapes(cfg, shape)
+        if shape.kind == "train":
+            return {"state": S.state_shapes(cfg), "batch": batch}
+        return {"params": M.param_shapes(cfg), "batch": batch}
+    # decode: one new token against caches of length seq_len
+    caches = jax.eval_shape(lambda: M.init_caches(cfg, b, s))
+    return {
+        "params": M.param_shapes(cfg),
+        "token": sds((b, 1), jnp.int32),
+        "cache_len": sds((b,), jnp.int32),
+        "caches": caches,
+    }

@@ -1,0 +1,132 @@
+"""End-to-end training driver (local mesh; production mesh via dry-run).
+
+Wires: config -> synthetic/file data (deterministic resume) -> jitted
+train_step on a local mesh -> periodic async checkpoints -> supervisor
+restart loop.  Used by examples/train_lm.py and the e2e tests.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import sharding as SH
+from ..checkpoint import ckpt
+from ..config import ParallelConfig, TrainConfig
+from ..configs import get_config
+from ..data import Prefetcher, SyntheticLM
+from ..ft import TrainSupervisor
+from ..models import steps as S
+from .mesh import make_local_mesh
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq: int,
+               tc: Optional[TrainConfig] = None,
+               parallel: Optional[ParallelConfig] = None,
+               ckpt_dir: Optional[str] = None, save_every: int = 50,
+               model_parallel: int = 1, log_every: int = 10,
+               resume: bool = True, fail_at: Optional[int] = None,
+               seed: int = 0, log=print) -> Dict:
+    tc = tc or TrainConfig(total_steps=steps)
+    parallel = parallel or ParallelConfig(seq_shard_activations=False)
+    mesh = make_local_mesh(model_parallel)
+    data = SyntheticLM(cfg.vocab_size, batch, seq, seed=seed)
+
+    state_shapes = S.state_shapes(cfg)
+    st_spec = SH.state_specs(mesh, cfg, state_shapes, fsdp=parallel.fsdp)
+    st_shard = SH.named(mesh, st_spec)
+    b_shard = SH.named(mesh, {"tokens": P(SH.data_axes(mesh), None),
+                              "targets": P(SH.data_axes(mesh), None)})
+    step_fn = jax.jit(S.make_train_step(cfg, tc, parallel),
+                      in_shardings=(st_shard, b_shard),
+                      out_shardings=(st_shard, NamedSharding(mesh, P())),
+                      donate_argnums=(0,))
+
+    start_step = 0
+    if ckpt_dir and resume and ckpt.latest_step(ckpt_dir) is not None:
+        state, start_step = ckpt.restore(state_shapes, ckpt_dir,
+                                         shardings=st_shard)
+        log(f"[train] resumed from step {start_step}")
+    else:
+        with mesh:
+            state = jax.jit(
+                lambda k: S.init_state(k, cfg),
+                out_shardings=st_shard)(jax.random.PRNGKey(tc.seed))
+
+    losses: list = []
+    holder = {"state": state, "fail_at": fail_at}
+
+    def run_steps(frm: int, to: int) -> int:
+        it = Prefetcher(data.iter_from(frm))
+        try:
+            for step in range(frm, to):
+                if holder["fail_at"] is not None \
+                        and step == holder["fail_at"]:
+                    holder["fail_at"] = None     # inject exactly once
+                    raise RuntimeError("injected failure")
+                b = next(it)
+                hb = {k: jnp.asarray(v) for k, v in b.items()}
+                holder["state"], metrics = step_fn(holder["state"], hb)
+                if (step + 1) % log_every == 0 or step + 1 == to:
+                    loss = float(metrics["loss"])
+                    losses.append((step + 1, loss))
+                    log(f"[train] step {step+1:5d} loss {loss:.4f} "
+                        f"lr {float(metrics['lr']):.2e} "
+                        f"gnorm {float(metrics['grad_norm']):.2f}")
+        finally:
+            it.close()
+        return to
+
+    def save(step: int) -> None:
+        if ckpt_dir:
+            ckpt.save(holder["state"], step, ckpt_dir)
+
+    def restore() -> int:
+        st, step = ckpt.restore(state_shapes, ckpt_dir, shardings=st_shard)
+        holder["state"] = st
+        return step
+
+    sup = TrainSupervisor(save_every=save_every)
+    t0 = time.time()
+    final = sup.run(total_steps=steps, start_step=start_step,
+                    run_steps=run_steps, save=save,
+                    restore=restore if ckpt_dir else (lambda: start_step))
+    wall = time.time() - t0
+    return {"final_step": final, "losses": losses, "wall_s": wall,
+            "restarts": sup.restarts, "events": sup.events,
+            "state": holder["state"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    out = train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                     ckpt_dir=args.ckpt_dir,
+                     model_parallel=args.model_parallel)
+    first = out["losses"][0][1] if out["losses"] else float("nan")
+    last = out["losses"][-1][1] if out["losses"] else float("nan")
+    print(f"[train] done: {out['final_step']} steps in {out['wall_s']:.1f}s"
+          f"  loss {first:.3f} -> {last:.3f}")
+
+
+if __name__ == "__main__":
+    main()

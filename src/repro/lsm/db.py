@@ -1,0 +1,147 @@
+"""KV store facade: sim + devices + middleware + LSM-tree, per scheme.
+
+Scheme names follow the paper:
+  B1..B4    basic placement (§2.3), level threshold h
+  B3+M      basic + workload-aware migration (Exp#2)
+  AUTO      SpanDB automated placement (§4.1)
+  P         HHZS write-guided placement only
+  P+M       + workload-aware migration
+  P+M+C     + application-hinted caching  (== HHZS, the full system)
+  HHZS      alias of P+M+C
+
+Scaling: the paper's setup is reproduced at 1/SCALE.  Every *size* (object
+dataset, SSTs, zones, MemTables, level targets, caches) and every
+*bandwidth* (sequential device rates, migration rate limit, delayed-write
+rate) is divided by SCALE, while random-read IOPS and per-request overheads
+are kept — this preserves all the paper's time ratios exactly (an SST
+migration still takes ~4.2 virtual minutes at the default rate; loading
+still takes ~8 virtual hours), with 1/SCALE the number of simulated
+operations.  Reported OPS are therefore paper-OPS / SCALE.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+from ..core.middleware import HybridZonedBackend
+from ..core.placement import (AutoPlacement, BasicScheme, HHZSPlacement,
+                              PlacementPolicy)
+from ..zoned.device import (MiB, ST14000_HDD, ZN540_SSD, DeviceTiming,
+                            ZonedDevice)
+from ..zoned.sim import Sim
+from .tree import LSMConfig, LSMTree
+
+SCALE = 100  # paper sizes & bandwidths / SCALE
+
+
+def _scaled_timing(t: DeviceTiming, s: int) -> DeviceTiming:
+    """Scale every *rate* by 1/s (sizes are scaled elsewhere): the simulated
+    system is then exactly the paper's system slowed down by s — every
+    dimensionless ratio (cache lifetime / run length, migration time / SST
+    churn, interference fractions) is preserved.  Virtual durations match
+    the paper 1:1; simulated OPS = paper OPS / s; latencies = paper × s."""
+    return DeviceTiming(seq_read_bw=t.seq_read_bw / s,
+                        seq_write_bw=t.seq_write_bw / s,
+                        rand_read_iops=t.rand_read_iops / s,
+                        seq_overhead=t.seq_overhead)
+
+
+@dataclass
+class ScenarioConfig:
+    ssd_zones: int = 20
+    ssd_zone_cap: int = int(1077 * MiB) // SCALE
+    hdd_zones: int = 12000
+    hdd_zone_cap: int = int(256 * MiB) // SCALE
+    wal_cache_zones: int = 2
+    migration_rate: float = 4 * MiB / SCALE
+    io_chunk: int = max(4096, int(1 * MiB) // SCALE)
+    ssd_timing: DeviceTiming = _scaled_timing(ZN540_SSD, SCALE)
+    hdd_timing: DeviceTiming = _scaled_timing(ST14000_HDD, SCALE)
+    lsm: LSMConfig = field(default_factory=lambda: LSMConfig(
+        sst_size=int(1011.2 * MiB) // SCALE,
+        memtable_size=int(512 * MiB) // SCALE,
+        level_targets=(int(1024 * MiB) // SCALE, int(1024 * MiB) // SCALE,
+                       int(10 * 1024 * MiB) // SCALE,
+                       int(100 * 1024 * MiB) // SCALE,
+                       int(1000 * 1024 * MiB) // SCALE),
+        block_cache_blocks=int(8 * MiB) // SCALE // 4096,
+        soft_pending_bytes=int(64 * 1024 * MiB) // SCALE,
+        delayed_write_rate=16 * MiB / SCALE,
+    ))
+
+    @property
+    def paper_keys(self) -> int:
+        """200 GiB of 1 KiB objects, scaled."""
+        return int(200 * 1024 * MiB / SCALE / self.lsm.obj_size)
+
+
+SCHEMES = ("B1", "B2", "B3", "B4", "B3+M", "AUTO", "P", "P+M", "P+M+C", "HHZS")
+
+
+def _build_placement(scheme: str) -> PlacementPolicy:
+    if scheme.startswith("B"):
+        h = int(scheme[1])
+        return BasicScheme(h)
+    if scheme == "AUTO":
+        return AutoPlacement()
+    return HHZSPlacement()
+
+
+class DB:
+    """One KV store instance on one hybrid zoned storage scenario."""
+
+    def __init__(self, scheme: str = "HHZS",
+                 scenario: Optional[ScenarioConfig] = None,
+                 store_values: bool = False):
+        base = scheme.split("+")[0]
+        if scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {scheme!r}; one of {SCHEMES}")
+        self.scheme = scheme
+        sc = scenario or ScenarioConfig()
+        if store_values:
+            sc = replace(sc, lsm=replace(sc.lsm, store_values=True))
+        self.scenario = sc
+        self.sim = Sim()
+        self.ssd = ZonedDevice(self.sim, "ssd", sc.ssd_timing,
+                               sc.ssd_zones, sc.ssd_zone_cap)
+        self.hdd = ZonedDevice(self.sim, "hdd", sc.hdd_timing,
+                               sc.hdd_zones, sc.hdd_zone_cap)
+        placement = _build_placement(base)
+        enable_m = scheme in ("B3+M", "P+M", "P+M+C", "HHZS")
+        enable_c = scheme in ("P+M+C", "HHZS")
+        self.backend = HybridZonedBackend(
+            self.sim, self.ssd, self.hdd, placement,
+            wal_cache_zones=sc.wal_cache_zones,
+            block_size=sc.lsm.block_size,
+            enable_migration=enable_m,
+            enable_cache=enable_c,
+            migration_rate=sc.migration_rate,
+            io_chunk=sc.io_chunk,
+            basic_migration_low_levels=(3 if scheme == "B3+M" else None),
+        )
+        self.tree = LSMTree(self.sim, sc.lsm, self.backend)
+        self.backend.start()
+
+    # ---- synchronous helpers (tests / examples) -----------------------
+    def _run(self, gen):
+        return self.sim.run_until(self.sim.process(gen))
+
+    def put(self, key: int, value: Optional[bytes] = None):
+        return self._run(self.tree.put(key, value))
+
+    def get(self, key: int):
+        return self._run(self.tree.get(key))
+
+    def delete(self, key: int):
+        return self._run(self.tree.delete(key))
+
+    def scan(self, start_key: int, count: int):
+        return self._run(self.tree.scan(start_key, count))
+
+    def flush_all(self):
+        """Flush all MemTables + WAL (clean reopen between load and run)."""
+        return self._run(self.tree.flush_all())
+
+    def drain(self) -> None:
+        """Run the simulator until all background work settles."""
+        self.sim.run()

@@ -1,0 +1,465 @@
+"""Simulated LSM-tree KV store (RocksDB-flavoured, §2.2) issuing hints.
+
+Structure: an active MemTable + immutable MemTables (flush when >=
+``min_flush_memtables``, stall writes beyond ``max_memtables``), a WAL on
+zoned storage via the middleware, levels L0..Ln with exponentially growing
+target sizes, leveled compaction (one Li SST merged with the overlapping
+Li+1 SSTs; L0 compacts all files because of overlapping ranges), Bloom
+filters, and an in-memory LRU block cache whose evictions emit cache hints.
+
+All read/write paths are simulator generators so that device time (and
+interference with background jobs) is accounted per operation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Generator, List, Optional, Set, Tuple
+
+import numpy as np
+
+from ..core.hints import (CompactionDoneHint, CompactionOutputHint,
+                          CompactionTriggerHint, FlushHint)
+from ..core.middleware import HybridZonedBackend
+from ..zoned.sim import Semaphore, Sim
+from .block_cache import BlockCache
+from .sstable import SST, merge_runs
+
+
+@dataclass
+class LSMConfig:
+    obj_size: int = 1024                 # 24 B key + 1000 B value
+    block_size: int = 4096
+    sst_size: int = int(1.0112 * (1 << 20))   # scaled 1011.2 MiB -> 1.0112 MiB
+    memtable_size: int = int(0.512 * (1 << 20))
+    min_flush_memtables: int = 2
+    max_memtables: int = 4
+    level_targets: Tuple[int, ...] = ()  # bytes per level; set by scenario
+    num_levels: int = 5
+    bloom_fp_rate: float = 0.01
+    block_cache_blocks: int = 8
+    max_background_jobs: int = 12
+    l0_stall_files: int = 36
+    # RocksDB-style write throttling: slow writes when L0 piles up or the
+    # pending compaction debt grows (scaled from the 64 GiB default)
+    l0_slowdown_files: int = 20
+    soft_pending_bytes: int = int(64 * (1 << 20))
+    delayed_write_rate: float = 16 * (1 << 20)   # bytes/s, auto-adjusted
+    store_values: bool = False
+
+    @property
+    def sst_max_objs(self) -> int:
+        return max(1, self.sst_size // self.obj_size)
+
+    @property
+    def memtable_max_objs(self) -> int:
+        return max(1, self.memtable_size // self.obj_size)
+
+    def target_of(self, level: int) -> int:
+        if level < len(self.level_targets):
+            return self.level_targets[level]
+        # default: 1 GiB-scaled L0/L1 then 10x per level
+        base = self.level_targets[-1] if self.level_targets else self.sst_size
+        return base * (10 ** (level - len(self.level_targets) + 1))
+
+
+@dataclass
+class MemTable:
+    gen: int
+    data: Dict[int, Tuple[bool, Optional[bytes]]] = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+
+class LSMTree:
+    def __init__(self, sim: Sim, cfg: LSMConfig, backend: HybridZonedBackend):
+        self.sim = sim
+        self.cfg = cfg
+        self.backend = backend
+        self.memtable = MemTable(gen=0)
+        self.immutables: List[MemTable] = []
+        self.levels: List[List[SST]] = [[] for _ in range(cfg.num_levels + 2)]
+        self._next_sst = 0
+        self._next_cid = 0
+        self.jobs = Semaphore(sim, cfg.max_background_jobs)
+        self._stall_waiters: List = []
+        self._flush_running = False
+        self._force_flush = False
+        self._wal_pressure = False
+        self._flushing: List[MemTable] = []   # readable until SSTs install
+        self._flush_watchers: List = []
+        backend.wal_pressure_cb = self._on_wal_pressure
+        self._rr_key: Dict[int, int] = {}    # round-robin compaction cursor
+        self._level_bytes: List[int] = [0] * (cfg.num_levels + 2)
+        # delayed-write controller (RocksDB WriteController flavour)
+        self._delay_rate = float(cfg.delayed_write_rate)
+        self._next_delayed_write = 0.0
+        self._debt_prev = 0.0
+        sim.process(self._delay_controller())
+        self.block_cache = BlockCache(cfg.block_cache_blocks, self._on_evict)
+        self.stats: Dict[str, float] = {
+            "puts": 0, "gets": 0, "hits": 0, "scans": 0,
+            "write_stalls": 0, "compactions": 0, "flushes": 0,
+            "bloom_fp": 0, "delayed_writes": 0,
+        }
+
+    # ------------------------------------------------------------------
+    def _on_evict(self, sst_id: int, block_idx: int) -> None:
+        sst = self.backend.ssts.get(sst_id)
+        self.backend.on_block_evicted(sst, block_idx)
+
+    def _new_sst_id(self) -> int:
+        self._next_sst += 1
+        return self._next_sst
+
+    def level_size(self, level: int) -> int:
+        return self._level_bytes[level]
+
+    def level_sizes(self) -> List[int]:
+        return list(self._level_bytes)
+
+    def _install_sst(self, sst: SST, level: int) -> None:
+        self.levels[level].append(sst)
+        self._level_bytes[level] += sst.size_bytes
+
+    def _remove_sst(self, sst: SST) -> None:
+        self.levels[sst.level].remove(sst)
+        self._level_bytes[sst.level] -= sst.size_bytes
+
+    def compaction_debt(self) -> int:
+        return sum(max(0, self._level_bytes[l] - self.cfg.target_of(l))
+                   for l in range(self.cfg.num_levels))
+
+    def _delay_controller(self):
+        """Adapt the delayed write rate to whether compactions keep up."""
+        while True:
+            yield self.sim.timeout(1.0, daemon=True)
+            debt = self.compaction_debt()
+            throttling = (debt > self.cfg.soft_pending_bytes
+                          or len(self.levels[0]) >= self.cfg.l0_slowdown_files)
+            if throttling and debt >= self._debt_prev:
+                self._delay_rate = max(self._delay_rate * 0.7,
+                                       self.cfg.delayed_write_rate / 16.0)
+            elif debt < self._debt_prev:
+                self._delay_rate = min(self._delay_rate * 1.4,
+                                       float(self.cfg.delayed_write_rate))
+            self._debt_prev = debt
+
+    def total_objs(self) -> int:
+        n = sum(len(m) for m in [self.memtable] + self.immutables)
+        n += sum(s.num_objs for lvl in self.levels for s in lvl)
+        return n
+
+    # ==================================================================
+    # write path
+    # ==================================================================
+    def put(self, key: int, value: Optional[bytes] = None,
+            tombstone: bool = False) -> Generator:
+        self.stats["puts"] += 1
+        # stall while memtables are full or L0 is overwhelmed
+        while (len(self.immutables) >= self.cfg.max_memtables - 1
+               and len(self.memtable) >= self.cfg.memtable_max_objs) \
+                or len(self.levels[0]) >= self.cfg.l0_stall_files:
+            ev = self.sim.event()
+            self._stall_waiters.append(ev)
+            self.stats["write_stalls"] += 1
+            self._kick_background()
+            yield ev
+        # soft slowdown: pace writes while compactions are behind
+        if (len(self.levels[0]) >= self.cfg.l0_slowdown_files
+                or self.compaction_debt() > self.cfg.soft_pending_bytes):
+            target = max(self.sim.now, self._next_delayed_write) \
+                + self.cfg.obj_size / self._delay_rate
+            self._next_delayed_write = target
+            if target > self.sim.now:
+                self.stats["delayed_writes"] += 1
+                yield self.sim.timeout(target - self.sim.now)
+        wal_recs = yield from self.backend.wal_append(self.cfg.obj_size)
+        self.memtable.data[key] = (tombstone,
+                                   value if self.cfg.store_values else None)
+        # attribute the WAL bytes to the generation the data actually
+        # landed in (the memtable may have rotated while queued)
+        self.backend.wal_attribute(wal_recs, self.memtable.gen)
+        if len(self.memtable) >= self.cfg.memtable_max_objs:
+            self._rotate_memtable()
+
+    def delete(self, key: int) -> Generator:
+        yield from self.put(key, tombstone=True)
+
+    def _rotate_memtable(self) -> None:
+        self.immutables.append(self.memtable)
+        self.memtable = MemTable(gen=self.memtable.gen + 1)
+        self._kick_background()
+
+    # ==================================================================
+    # flush
+    # ==================================================================
+    def _flush_threshold(self) -> int:
+        if self._force_flush or self._wal_pressure:
+            return 1
+        return self.cfg.min_flush_memtables
+
+    def _on_wal_pressure(self) -> None:
+        """WAL zones exhausted: force a memtable switch + flush (RocksDB's
+        max_total_wal_size behaviour) so live WAL data dies and zones reset."""
+        if len(self.memtable.data):
+            self._rotate_memtable()
+        self._wal_pressure = True
+        self._kick_background()
+
+    def _kick_background(self) -> None:
+        if (not self._flush_running
+                and len(self.immutables) >= self._flush_threshold()):
+            self._flush_running = True
+            self.sim.process(self._flush_job())
+        self._maybe_compact()
+
+    def flush_all(self) -> Generator:
+        """Flush everything (clean-reopen semantics between load and run)."""
+        if len(self.memtable.data):
+            self._rotate_memtable()
+        self._force_flush = True
+        self._kick_background()
+        while self.immutables or self._flush_running:
+            ev = self.sim.event()
+            self._flush_watchers.append(ev)
+            yield ev
+        self._force_flush = False
+
+    def _flush_job(self) -> Generator:
+        yield self.jobs.acquire()
+        try:
+            while len(self.immutables) >= self._flush_threshold():
+                batch, self.immutables = self.immutables, []
+                # the batch stays readable until its SSTs are installed
+                # (RocksDB keeps the immutable memtable alive through the
+                # flush; without this, gets in flight miss these keys)
+                self._flushing = batch
+                gens = {m.gen for m in batch}
+                runs, tombs, values = [], [], {}
+                for m in reversed(batch):   # newest first
+                    ks = np.fromiter(m.data.keys(), dtype=np.uint64,
+                                     count=len(m.data))
+                    order = np.argsort(ks, kind="stable")
+                    ks = ks[order]
+                    tb = np.fromiter((m.data[int(k)][0] for k in ks),
+                                     dtype=np.bool_, count=len(ks))
+                    runs.append(ks)
+                    tombs.append(tb)
+                    if self.cfg.store_values:
+                        for k, (t, v) in m.data.items():
+                            values.setdefault(k, v)
+                keys, tb = merge_runs(runs, tombs)
+                for ks, tbs in self._split_sst(keys, tb):
+                    sst = self._make_sst(ks, tbs, level=0, values=values)
+                    self.backend.on_hint(FlushHint(sst_id=sst.sid))
+                    yield from self.backend.write_sst(sst, source="flush")
+                    self._install_sst(sst, 0)
+                self.backend.wal_flushed(gens)
+                self._flushing = []
+                self.stats["flushes"] += 1
+                self._wake_stalled()
+        finally:
+            self.jobs.release()
+            self._flush_running = False
+            self._wal_pressure = False
+            watchers, self._flush_watchers = self._flush_watchers, []
+            for ev in watchers:
+                ev.succeed()
+        self._kick_background()
+
+    def _split_sst(self, keys: np.ndarray, tombs: np.ndarray):
+        n = self.cfg.sst_max_objs
+        for i in range(0, len(keys), n):
+            yield keys[i:i + n], tombs[i:i + n]
+
+    def _make_sst(self, keys: np.ndarray, tombs: np.ndarray, level: int,
+                  values: Optional[dict] = None) -> SST:
+        vals = None
+        if self.cfg.store_values and values is not None:
+            vals = {int(k): values.get(int(k)) for k in keys}
+        return SST(sid=self._new_sst_id(), level=level, keys=keys,
+                   tombs=tombs, obj_size=self.cfg.obj_size,
+                   block_size=self.cfg.block_size, birth=self.sim.now,
+                   values=vals)
+
+    def _wake_stalled(self) -> None:
+        waiters, self._stall_waiters = self._stall_waiters, []
+        for ev in waiters:
+            ev.succeed()
+
+    # ==================================================================
+    # compaction
+    # ==================================================================
+    def _maybe_compact(self) -> None:
+        cfg = self.cfg
+        scores = []
+        for lvl in range(cfg.num_levels):
+            tgt = cfg.target_of(lvl)
+            size = self.level_size(lvl)
+            if tgt > 0 and size > tgt:
+                scores.append((size / tgt, lvl))
+        scores.sort(reverse=True)
+        for _, lvl in scores:
+            if self.jobs.in_use >= self.jobs.capacity:
+                break
+            inputs = self._pick_compaction(lvl)
+            if inputs:
+                self.sim.process(self._compaction_job(lvl, inputs))
+
+    def _pick_compaction(self, level: int) -> Optional[List[SST]]:
+        """Select input SSTs: Li victim(s) + overlapping Li+1, all unlocked."""
+        src = [s for s in self.levels[level] if not s.locked]
+        if not src:
+            return None
+        if level == 0:
+            picked = list(src)
+            lo = min(s.min_key for s in picked)
+            hi = max(s.max_key for s in picked)
+        else:
+            cursor = self._rr_key.get(level, -1)
+            src_sorted = sorted(src, key=lambda s: s.min_key)
+            pick = next((s for s in src_sorted if s.min_key > cursor),
+                        src_sorted[0])
+            picked = [pick]
+            lo, hi = pick.min_key, pick.max_key
+            self._rr_key[level] = pick.max_key
+        overlap = [s for s in self.levels[level + 1] if s.overlaps(lo, hi)]
+        if any(s.locked for s in overlap):
+            return None
+        inputs = picked + overlap
+        for s in inputs:
+            s.locked = True
+        return inputs
+
+    def _compaction_job(self, level: int, inputs: List[SST]) -> Generator:
+        yield self.jobs.acquire()
+        cid = self._next_cid = self._next_cid + 1
+        cfg = self.cfg
+        target = level + 1
+        try:
+            self.backend.on_hint(CompactionTriggerHint(
+                cid=cid, selected_sst_ids=tuple(s.sid for s in inputs),
+                target_level=target))
+            # read inputs sequentially (interleaved with other jobs)
+            for s in inputs:
+                dev = self.backend.device_of(s.tier)
+                rem = s.size_bytes
+                while rem > 0:
+                    n = min(self.backend.io_chunk, rem)
+                    yield dev.read(n, random=False, tag="compact")
+                    rem -= n
+            # merge: newest version wins; inputs ordered newest-priority first
+            src_lvl = [s for s in inputs if s.level == level]
+            dst_lvl = [s for s in inputs if s.level == target]
+            ordered = (sorted(src_lvl, key=lambda s: -s.birth) + dst_lvl
+                       if level == 0 else src_lvl + dst_lvl)
+            keys, tombs = merge_runs([s.keys for s in ordered],
+                                     [s.tombs for s in ordered])
+            values = None
+            if cfg.store_values:
+                values = {}
+                for s in ordered:
+                    if s.values:
+                        for k, v in s.values.items():
+                            values.setdefault(k, v)
+            # drop tombstones when compacting into the last populated level
+            bottom = all(not self.levels[l] for l in
+                         range(target + 1, len(self.levels)))
+            if bottom and len(keys):
+                keep = ~tombs
+                keys, tombs = keys[keep], tombs[keep]
+            outputs: List[SST] = []
+            for ks, tbs in self._split_sst(keys, tombs):
+                if not len(ks):
+                    continue
+                sst = self._make_sst(ks, tbs, level=target, values=values)
+                self.backend.on_hint(CompactionOutputHint(
+                    cid=cid, sst_id=sst.sid, level=target))
+                yield from self.backend.write_sst(sst, source="compaction")
+                outputs.append(sst)
+            # install outputs, delete inputs
+            for s in inputs:
+                self._remove_sst(s)
+                self.block_cache.drop_sst(s.sid)
+                self.backend.delete_sst(s)
+            for s in outputs:
+                self._install_sst(s, target)
+            self.levels[target].sort(key=lambda s: s.min_key)
+            self.backend.on_hint(CompactionDoneHint(
+                cid=cid, target_level=target, num_selected=len(inputs),
+                num_generated=len(outputs),
+                input_sst_ids=tuple(s.sid for s in inputs),
+                output_sst_ids=tuple(s.sid for s in outputs)))
+            self.stats["compactions"] += 1
+        finally:
+            for s in inputs:
+                s.locked = False
+            self.jobs.release()
+            self._wake_stalled()
+        self._kick_background()
+
+    # ==================================================================
+    # read path
+    # ==================================================================
+    def get(self, key: int) -> Generator:
+        """Generator returning (found, value|None)."""
+        self.stats["gets"] += 1
+        for m in [self.memtable] + list(reversed(self.immutables)) \
+                + list(reversed(self._flushing)):
+            if key in m.data:
+                tomb, val = m.data[key]
+                if not tomb:
+                    self.stats["hits"] += 1
+                return (not tomb, val)
+        cfg = self.cfg
+        for lvl in range(len(self.levels)):
+            if lvl == 0:
+                candidates = [s for s in reversed(self.levels[0])
+                              if s.min_key <= key <= s.max_key]
+            else:
+                candidates = [s for s in self.levels[lvl]
+                              if s.min_key <= key <= s.max_key]
+            for sst in candidates:
+                if not sst.bloom_maybe_contains(key, cfg.bloom_fp_rate):
+                    continue
+                found, idx = sst.find(key)
+                blk = sst.block_of(idx if found else
+                                   min(idx, max(sst.num_objs - 1, 0)))
+                if not self.block_cache.get(sst.sid, blk):
+                    yield from self.backend.read_block(sst, blk)
+                    self.block_cache.insert(sst.sid, blk)
+                if found:
+                    if bool(sst.tombs[idx]):
+                        return (False, None)
+                    self.stats["hits"] += 1
+                    val = sst.values.get(key) if sst.values else None
+                    return (True, val)
+                else:
+                    self.stats["bloom_fp"] += 1
+        return (False, None)
+
+    def scan(self, start_key: int, count: int) -> Generator:
+        """Range scan: read blocks covering [start, start+count) per level."""
+        self.stats["scans"] += 1
+        end_key = start_key + count
+        seen = 0
+        for m in [self.memtable] + self.immutables + self._flushing:
+            seen += sum(1 for k in m.data if start_key <= k < end_key)
+        for lvl in range(len(self.levels)):
+            for sst in self.levels[lvl]:
+                if not sst.overlaps(start_key, end_key - 1):
+                    continue
+                cnt = sst.count_in_range(start_key, end_key)
+                if cnt <= 0:
+                    continue
+                nblocks = -(-cnt // sst.objs_per_block)
+                a = int(np.searchsorted(sst.keys, np.uint64(start_key)))
+                for b in range(nblocks):
+                    blk = sst.block_of(min(a + b * sst.objs_per_block,
+                                           sst.num_objs - 1))
+                    if not self.block_cache.get(sst.sid, blk):
+                        yield from self.backend.read_block(sst, blk)
+                        self.block_cache.insert(sst.sid, blk)
+                seen += cnt
+        return seen

@@ -1,0 +1,11 @@
+from . import layers, model, steps
+from .model import init_params, param_shapes, forward, decode_step, init_caches
+from .steps import (make_train_step, make_prefill_step, make_serve_step,
+                    make_loss_fn, init_state, state_shapes)
+
+__all__ = [
+    "layers", "model", "steps",
+    "init_params", "param_shapes", "forward", "decode_step", "init_caches",
+    "make_train_step", "make_prefill_step", "make_serve_step",
+    "make_loss_fn", "init_state", "state_shapes",
+]

@@ -1,0 +1,451 @@
+"""Model building blocks, written as pure functions over param pytrees.
+
+Everything is initialised with explicit shapes so the whole model can be
+``jax.eval_shape``-d for the multi-pod dry-run without allocating memory.
+Layer parameters are *stacked* along a leading layer axis and consumed by
+``jax.lax.scan`` (keeps HLO size O(1) in depth — essential for compiling
+88-layer configs with 512 partitions).
+
+Covers: RMSNorm/qk-norm, RoPE, GQA attention (bias / sliding window /
+cross-attention), SwiGLU & GELU MLPs, top-k MoE with scatter-based dispatch
+(EP-shardable grouped GEMM), and Mamba-1 with a chunked selective scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+DTYPE = jnp.bfloat16
+
+# §Perf kernel-substitution switches (set by benchmarks/perf_lab.py only).
+# When a Pallas kernel replaces an XLA region on real TPUs, its HBM traffic
+# is inputs+outputs once (intermediates live in VMEM).  The CPU container
+# cannot lower Pallas, so the dry-run models kernel cells with
+# traffic-equivalent elementwise stand-ins; the kernels' numerics are
+# validated separately in interpret mode (tests/test_kernels.py) and the
+# removed FLOPs are added back analytically in EXPERIMENTS.md §Perf.
+STUB_KERNELS = {"attention": False, "ssm": False}
+
+
+# ======================================================================
+# initialisation helpers
+# ======================================================================
+def _dense_init(key, shape, scale_axis=0):
+    fan_in = shape[scale_axis] if shape else 1
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(DTYPE)
+
+
+def _zeros(shape):
+    return jnp.zeros(shape, dtype=DTYPE)
+
+
+# ======================================================================
+# norms / rope
+# ======================================================================
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ======================================================================
+# attention
+# ======================================================================
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim_
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd)),
+        "wk": _dense_init(ks[1], (d, kv * hd)),
+        "wv": _dense_init(ks[2], (d, kv * hd)),
+        "wo": _dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = _zeros((h * hd,))
+        p["bk"] = _zeros((kv * hd,))
+        p["bv"] = _zeros((kv * hd,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), DTYPE)
+        p["k_norm"] = jnp.ones((hd,), DTYPE)
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, xq: jnp.ndarray,
+                 xkv: jnp.ndarray):
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(*xq.shape[:-1], h, hd)
+    k = k.reshape(*xkv.shape[:-1], kv, hd)
+    v = v.reshape(*xkv.shape[:-1], kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _pick_block(s: int, target: int = 1024) -> int:
+    """Largest divisor of s that is <= target."""
+    if s <= target:
+        return s
+    for b in range(target, 0, -1):
+        if s % b == 0:
+            return b
+    return s
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         num_kv_groups: int, *, causal: bool,
+         window: Optional[jnp.ndarray] = None,
+         q_offset: int = 0, q_block: int = 1024) -> jnp.ndarray:
+    """Grouped-query attention, blocked over query chunks.
+
+    q: [B, Sq, H, D]; k/v: [B, Skv, KV, D].  Scores are materialised one
+    query block at a time (lax.scan) — O(Sq_block x Skv) live memory instead
+    of O(Sq x Skv); the same blocking the Pallas flash kernel uses in VMEM.
+    Softmax in fp32.  ``window`` may be a traced scalar (per-layer SWA).
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = num_kv_groups
+    if STUB_KERNELS["attention"]:
+        # flash-kernel traffic model: read q,k,v once, write o once
+        o = q + jnp.mean(k, axis=2, keepdims=True) \
+            + jnp.mean(v, axis=2, keepdims=True)
+        return o.reshape(b, sq, h * d)
+    qb = _pick_block(sq)
+    nb = sq // qb
+    q = q.reshape(b, nb, qb, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kpos = jnp.arange(skv)[None, :]                  # [1, Skv]
+
+    def block(carry, xs):
+        qblk, blk_idx = xs                           # [B, qb, KV, G, D]
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, k,
+                            preferred_element_type=jnp.float32)
+        scores = scores / np.sqrt(d)
+        if causal or window is not None:
+            qpos = (blk_idx * qb + jnp.arange(qb))[:, None] + q_offset
+            m = jnp.ones((qb, skv), bool)
+            if causal:
+                m &= kpos <= qpos
+            if window is not None:
+                m &= kpos > qpos - window
+            scores = jnp.where(m[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+        return carry, out
+
+    # recompute scores in the backward pass (flash-attention-style): without
+    # this, scan stacks per-block fp32 score residuals = the full S x S matrix
+    _, outs = jax.lax.scan(jax.checkpoint(block), None, (q, jnp.arange(nb)))
+    outs = outs.transpose(1, 0, 2, 3, 4, 5)          # [B, nb, qb, KV, G, D]
+    return outs.reshape(b, sq, h * d)
+
+
+def attention(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray,
+              window: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full self-attention over a training/prefill sequence (causal)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = sdpa(q, k, v, cfg.num_heads // cfg.num_kv_heads,
+               causal=True, window=window)
+    return out @ p["wo"]
+
+
+def cross_attention(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                    enc_kv: Tuple[jnp.ndarray, jnp.ndarray]) -> jnp.ndarray:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k, v = enc_kv
+    out = sdpa(q, k, v, h // kv, causal=False)
+    return out @ p["wo"]
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_len: jnp.ndarray,
+                     window: Optional[jnp.ndarray] = None):
+    """One-token decode against a dense KV cache.
+
+    x: [B, 1, d]; k_cache/v_cache: [B, S, KV, D]; cache_len: [B] current
+    lengths (new token goes to position cache_len).  Returns
+    (out [B, 1, d], k_cache, v_cache) with the caches updated in place
+    (functionally) — sliding-window archs pass ring-buffer-sized caches and
+    position `cache_len % S`.
+    """
+    b, _, _ = x.shape
+    s_max = k_cache.shape[1]
+    q, k, v = _project_qkv(p, cfg, x, x)
+    q = apply_rope(q, cache_len[:, None], cfg.rope_theta)
+    k = apply_rope(k, cache_len[:, None], cfg.rope_theta)
+    slot = (cache_len % s_max).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0].astype(v_cache.dtype))
+    kpos = jnp.arange(s_max)[None, :]
+    valid = kpos <= jnp.minimum(cache_len[:, None], s_max - 1)
+    if window is not None:
+        # ring buffer: everything still resident is within the window
+        valid = valid & (kpos > cache_len[:, None] - s_max)
+    # single-query attention against the cache (no blocking needed)
+    g = cfg.num_heads // cfg.num_kv_heads
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim_
+    qr = q.reshape(b, kvh, g, hd)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache.astype(q.dtype),
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(q.dtype),
+                     v_cache.astype(q.dtype))
+    out = out.reshape(b, 1, cfg.num_heads * hd)
+    return out @ p["wo"], k_cache, v_cache
+
+
+# ======================================================================
+# MLP / MoE
+# ======================================================================
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu":
+        return {"wi": _dense_init(ks[0], (d, f)),
+                "wo": _dense_init(ks[1], (f, d))}
+    return {"w_gate": _dense_init(ks[0], (d, f)),
+            "w_up": _dense_init(ks[1], (d, f)),
+            "w_down": _dense_init(ks[2], (f, d))}
+
+
+def mlp(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if "wi" in p:
+        return jax.nn.gelu(x @ p["wi"]) @ p["wo"]
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, e)).astype(jnp.float32),
+        "we_gate": _dense_init(ks[1], (e, d, f), scale_axis=1),
+        "we_up": _dense_init(ks[2], (e, d, f), scale_axis=1),
+        "we_down": _dense_init(ks[3], (e, f, d), scale_axis=1),
+    }
+
+
+def moe(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+        constraint=None) -> jnp.ndarray:
+    """Top-k MoE with scatter-based dispatch into per-expert buffers.
+
+    Dispatch runs *per batch row* (vmap) so the global-batch dim stays
+    data-parallel under GSPMD; expert buffers [B, E, C, d] run as one
+    grouped GEMM einsum whose E axis shards for expert parallelism (weights
+    carry the "model"-axis sharding).  Capacity C = S·k/E·factor per row,
+    overflow drops (GShard-style).  Memory stays O(B·S·k·d) — no
+    [T, E, C] one-hot dispatch tensors.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(int(cfg.capacity_factor * s * k / e), 1)
+
+    logits = (x.astype(jnp.float32) @ p["router"])           # [B, S, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, k)                   # [B, S, k]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    def dispatch_row(xr, er):
+        """xr: [S, d], er: [S, k] -> buf [E, C, d], pos [S*k], keep [S*k]."""
+        flat_e = er.reshape(-1)                              # [S*k]
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+        keep = pos < cap
+        buf = jnp.zeros((e, cap, d), dtype=xr.dtype)
+        tok_idx = jnp.repeat(jnp.arange(s), k)
+        safe_pos = jnp.where(keep, pos, cap)                 # OOB -> dropped
+        buf = buf.at[flat_e, safe_pos].set(xr[tok_idx], mode="drop")
+        return buf, pos, keep
+
+    buf, pos, keep = jax.vmap(dispatch_row)(x, top_e)        # [B, E, C, d]
+    if constraint is not None:
+        buf = constraint(buf, "moe_buf")
+    # grouped expert GEMMs (EP: shard over E; data-parallel over B)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["we_gate"])) \
+        * jnp.einsum("becd,edf->becf", buf, p["we_up"])
+    if constraint is not None:
+        h = constraint(h, "moe_h")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["we_down"])
+    if constraint is not None:
+        out_buf = constraint(out_buf, "moe_buf")
+
+    def combine_row(ob, er, posr, keepr, wr):
+        flat_e = er.reshape(-1)
+        gathered = ob[flat_e, jnp.minimum(posr, cap - 1)]    # [S*k, d]
+        gathered = jnp.where(keepr[:, None], gathered, 0.0)
+        w = wr.reshape(-1)[:, None].astype(gathered.dtype)
+        out = jnp.zeros((s, d), dtype=gathered.dtype)
+        tok_idx = jnp.repeat(jnp.arange(s), k)
+        return out.at[tok_idx].add(gathered * w)
+
+    out = jax.vmap(combine_row)(out_buf, top_e, pos, keep, top_w)
+    return out.reshape(b, s, d)
+
+
+# ======================================================================
+# Mamba-1 (selective state space)
+# ======================================================================
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d, di = cfg.d_model, cfg.d_inner_
+    n, rk, kc = cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di)),
+        "conv_w": _dense_init(ks[1], (kc, di)),
+        "conv_b": _zeros((di,)),
+        "x_proj": _dense_init(ks[2], (di, rk + 2 * n)),
+        "dt_proj": _dense_init(ks[3], (rk, di)),
+        "dt_bias": _zeros((di,)),
+        "A_log": jnp.log(a),                        # fp32 [di, N]
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d)),
+    }
+
+
+def _ssm_scan_chunked(dt, a, bx, c, chunk: int):
+    """Selective scan via lax.scan over chunks + associative scan inside.
+
+    dt: [B,T,di]  (softplus'd delta)      a: [di,N]  (negative, fp32)
+    bx: [B,T,di,N] (dt * B * x)           c: [B,T,N]
+    Returns y: [B,T,di].  Chunking keeps the [B,chunk,di,N] intermediate
+    bounded — the same blocking strategy the Pallas kernel uses in VMEM.
+    """
+    bsz, t, di = dt.shape
+    n = a.shape[-1]
+    nchunk = t // chunk
+    dt_c = dt.reshape(bsz, nchunk, chunk, di).transpose(1, 0, 2, 3)
+    bx_c = bx.reshape(bsz, nchunk, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    c_c = c.reshape(bsz, nchunk, chunk, n).transpose(1, 0, 2, 3)
+
+    def chunk_step(h0, xs):
+        dtk, bxk, ck = xs                       # [B,chunk,di], [B,chunk,di,N]
+        decay = jnp.exp(dtk[..., None] * a)     # [B,chunk,di,N]
+        # associative scan: (decay, add) pairs compose left-to-right
+        def combine(l, r):
+            dl, xl = l
+            dr, xr = r
+            return dl * dr, xl * dr + xr
+        dprod, hs = jax.lax.associative_scan(
+            combine, (decay, bxk), axis=1)
+        hs = hs + dprod * h0[:, None]           # fold in carry state
+        y = jnp.einsum("bldn,bln->bld", hs, ck)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, (dt_c, bx_c, c_c))
+    return ys.transpose(1, 0, 2, 3).reshape(bsz, t, di)
+
+
+def mamba(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+          chunk: int = 128) -> jnp.ndarray:
+    """Mamba-1 block over a full sequence (training / prefill)."""
+    bsz, t, _ = x.shape
+    di, n = cfg.d_inner_, cfg.ssm_state
+    rk = cfg.dt_rank
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)           # [B,T,di] each
+    # causal depthwise conv, kernel ssm_conv
+    kc = cfg.ssm_conv
+    xpad = jnp.pad(xs, ((0, 0), (kc - 1, 0), (0, 0)))
+    xs = sum(xpad[:, i:i + t] * p["conv_w"][i] for i in range(kc))
+    xs = jax.nn.silu(xs + p["conv_b"])
+    proj = xs @ p["x_proj"]                     # [B,T,rk+2N]
+    dt_in, b_in, c_in = jnp.split(proj, [rk, rk + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                    # [di,N]
+    if STUB_KERNELS["ssm"]:
+        # fused-scan-kernel traffic model: read dt/x/B/C once, write y once
+        # (kernels/selective_scan/fused.py forms dt*B*x in VMEM)
+        y = dt * xs.astype(jnp.float32) \
+            * (jnp.sum(c_in, -1, keepdims=True)
+               + jnp.sum(b_in, -1, keepdims=True)).astype(jnp.float32) \
+            + jnp.sum(a) * 0.0
+    else:
+        bx = dt[..., None] * b_in[:, :, None, :].astype(jnp.float32) \
+            * xs[..., None].astype(jnp.float32)     # [B,T,di,N]
+        chunk = min(chunk, t)
+        while t % chunk:
+            chunk -= 1
+        y = _ssm_scan_chunked(dt, a, bx, c_in.astype(jnp.float32), chunk)
+    y = y + xs.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """Single-token Mamba step.
+
+    x: [B,1,d]; conv_state: [B, kc-1, di]; ssm_state: [B, di, N] (fp32).
+    Returns (y [B,1,d], conv_state, ssm_state).
+    """
+    bsz = x.shape[0]
+    di, n, rk, kc = cfg.d_inner_, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    xz = x[:, 0] @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)           # [B,di]
+    window = jnp.concatenate([conv_state, xs[:, None]], axis=1)  # [B,kc,di]
+    conv_state = window[:, 1:]
+    xs = jnp.einsum("bkd,kd->bd", window, p["conv_w"])
+    xs = jax.nn.silu(xs + p["conv_b"])
+    proj = xs @ p["x_proj"]
+    dt_in, b_in, c_in = jnp.split(proj, [rk, rk + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])  # [B,di]
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt[..., None] * a)          # [B,di,N]
+    bx = dt[..., None] * b_in[:, None, :].astype(jnp.float32) \
+        * xs[..., None].astype(jnp.float32)
+    ssm_state = ssm_state * decay + bx
+    y = jnp.einsum("bdn,bn->bd", ssm_state, c_in.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return (y @ p["out_proj"])[:, None], conv_state, ssm_state

@@ -1,0 +1,361 @@
+"""Model assembly: init + forward for every architecture family.
+
+All families share one scanned-decoder skeleton.  Per-layer parameters are
+stacked on a leading layer axis and consumed by ``jax.lax.scan`` so HLO size
+is depth-independent.  Layer heterogeneity (hybrid archs mixing full
+attention and sliding-window layers) is expressed as *data*: a per-layer
+window array is passed through the scan instead of specialising the body.
+
+Forward entry points:
+  forward(params, batch)               -> logits            (train / prefill)
+  decode_step(params, batch, caches)   -> logits, caches    (one token)
+  init_caches(cfg, batch, max_len)     -> decode caches (KV / SSM / ring)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+from . import layers as L
+
+Params = Dict
+
+
+# ======================================================================
+# per-layer parameter construction (stacked over layers via vmap)
+# ======================================================================
+def _init_layer(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"attn_norm": jnp.ones((cfg.d_model,), L.DTYPE),
+                 "mlp_norm": jnp.ones((cfg.d_model,), L.DTYPE)}
+    if cfg.family != "ssm":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    if cross:
+        p["cross_norm"] = jnp.ones((cfg.d_model,), L.DTYPE)
+        p["cross_attn"] = L.init_attention(ks[1], cfg, cross=True)
+    if cfg.is_moe:
+        p["moe"] = L.init_moe(ks[2], cfg)
+    elif cfg.d_ff > 0:
+        p["mlp"] = L.init_mlp(ks[3], cfg)
+    if cfg.has_ssm:
+        p["ssm_norm"] = jnp.ones((cfg.d_model,), L.DTYPE)
+        p["ssm"] = L.init_mamba(ks[4], cfg)
+    return p
+
+
+def _stacked_layers(key, cfg: ModelConfig, n: int, cross: bool) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(k, cfg, cross))(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "embed": L._dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                               scale_axis=1),
+        "final_norm": jnp.ones((cfg.d_model,), L.DTYPE),
+        "layers": _stacked_layers(ks[1], cfg, cfg.num_layers,
+                                  cross=cfg.encoder_layers > 0),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._dense_init(ks[2], (cfg.d_model, cfg.vocab_size))
+    if cfg.encoder_layers:
+        enc_cfg = cfg
+        p["encoder"] = {
+            "layers": _stacked_layers(ks[3], enc_cfg, cfg.encoder_layers,
+                                      cross=False),
+            "final_norm": jnp.ones((cfg.d_model,), L.DTYPE),
+        }
+    return p
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    """Shape tree without allocation (for the dry-run)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# ======================================================================
+# per-layer window schedule (hybrid archs)
+# ======================================================================
+def layer_windows(cfg: ModelConfig) -> Optional[np.ndarray]:
+    """Per-layer sliding-window size; 0 = full attention.  Returned as an
+    array scanned alongside the stacked params."""
+    if not cfg.has_attention:
+        return None
+    if cfg.full_attn_layers:
+        w = np.full((cfg.num_layers,), cfg.sliding_window or 0, np.int32)
+        for i in cfg.full_attn_layers:
+            w[i % cfg.num_layers] = 0
+        return w
+    if cfg.sliding_window:
+        return np.full((cfg.num_layers,), cfg.sliding_window, np.int32)
+    return np.zeros((cfg.num_layers,), np.int32)
+
+
+def _window_or_none(w: jnp.ndarray):
+    """Traced per-layer window: 0 means unbounded; encode as huge window so
+    the mask computation stays uniform across scanned layers."""
+    return jnp.where(w > 0, w, jnp.int32(2**30))
+
+
+# ======================================================================
+# decoder block (one scanned layer)
+# ======================================================================
+def _block(cfg: ModelConfig, x, layer: Params, positions, window,
+           enc_kv=None, constraint=None):
+    if cfg.family == "ssm":
+        x = x + L.mamba(layer["ssm"], cfg,
+                        L.rms_norm(x, layer["ssm_norm"], cfg.norm_eps))
+    elif cfg.family == "hybrid":
+        # parallel attention + SSM heads over the same normed input (Hymba)
+        h = L.rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        attn_out = L.attention(layer["attn"], cfg, h, positions,
+                               window=_window_or_none(window))
+        ssm_out = L.mamba(layer["ssm"], cfg,
+                          L.rms_norm(x, layer["ssm_norm"], cfg.norm_eps))
+        x = x + attn_out + ssm_out
+    else:
+        h = L.rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        x = x + L.attention(layer["attn"], cfg, h, positions,
+                            window=_window_or_none(window))
+    if enc_kv is not None:
+        h = L.rms_norm(x, layer["cross_norm"], cfg.norm_eps)
+        x = x + L.cross_attention(layer["cross_attn"], cfg, h, enc_kv)
+    if cfg.is_moe:
+        h = L.rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + _moe_dispatch(cfg, layer["moe"], h, constraint)
+    elif cfg.d_ff > 0:
+        h = L.rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + L.mlp(layer["mlp"], cfg, h)
+    return x
+
+
+def _moe_dispatch(cfg: ModelConfig, p, h, constraint):
+    """Pick the shard_map expert-parallel MoE when running on a mesh with
+    sequence-sharded activations (the GSPMD scatter path replicates)."""
+    mesh = getattr(constraint, "mesh", None)
+    if mesh is not None and getattr(constraint, "seq_shard", False):
+        from .moe_sharded import moe_shard_map
+        dp = constraint.dp
+        ep = mesh.shape["model"]
+        b, s, _ = h.shape
+        dp_size = int(np.prod([mesh.shape[a] for a in
+                               (dp if isinstance(dp, tuple) else (dp,))]))
+        if s % ep == 0 and b % dp_size == 0 \
+                and (cfg.num_experts % ep == 0 or cfg.d_ff % ep == 0):
+            return moe_shard_map(p, cfg, h, mesh, dp)
+    return L.moe(p, cfg, h, constraint=constraint)
+
+
+def _scan_blocks(cfg: ModelConfig, params: Params, x, positions,
+                 enc_kv=None, remat: bool = True,
+                 constraint=None):
+    windows = layer_windows(cfg)
+    windows = jnp.zeros((cfg.num_layers,), jnp.int32) if windows is None \
+        else jnp.asarray(windows)
+
+    def body(carry, xs):
+        layer, window = xs
+        y = _block(cfg, carry, layer, positions, window, enc_kv,
+                   constraint=constraint)
+        if constraint is not None:
+            y = constraint(y)
+        return y, ()
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, (params["layers"], windows))
+    return x
+
+
+# ======================================================================
+# forward passes
+# ======================================================================
+def embed_inputs(cfg: ModelConfig, params: Params, batch: Dict):
+    x = params["embed"][batch["tokens"]]
+    if cfg.vision_prefix:
+        # VLM stub: the first `vision_prefix` positions carry precomputed
+        # patch embeddings from the (stubbed) vision frontend
+        x = jax.lax.dynamic_update_slice(
+            x, batch["vision_embeds"].astype(x.dtype), (0, 0, 0))
+    return x
+
+
+def _encode(cfg: ModelConfig, params: Params, frames):
+    """Whisper-style encoder over precomputed frame embeddings (conv stub).
+    Bidirectional attention (no causal mask) via full-window trick."""
+    enc = params["encoder"]
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, layer):
+        h = L.rms_norm(carry, layer["attn_norm"], cfg.norm_eps)
+        q, k, v = L._project_qkv(layer["attn"], cfg, h, h)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        out = L.sdpa(q, k, v, cfg.num_heads // cfg.num_kv_heads,
+                     causal=False)
+        y = carry + out @ layer["attn"]["wo"]
+        h = L.rms_norm(y, layer["mlp_norm"], cfg.norm_eps)
+        y = y + L.mlp(layer["mlp"], cfg, h)
+        return y, ()
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), frames.astype(L.DTYPE),
+                        enc["layers"])
+    return L.rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def encoder_kv(cfg: ModelConfig, params: Params, enc_out):
+    """Precompute cross-attention K/V from encoder output.
+
+    Uses layer 0's cross projections for all layers would be wrong — instead
+    K/V are computed inside the scan from the stacked cross_attn params; this
+    helper exists for the decode path where enc K/V are cached per layer."""
+    def per_layer(layer):
+        b, s, _ = enc_out.shape
+        kv, hd = cfg.num_kv_heads, cfg.head_dim_
+        k = (enc_out @ layer["cross_attn"]["wk"]).reshape(b, s, kv, hd)
+        v = (enc_out @ layer["cross_attn"]["wv"]).reshape(b, s, kv, hd)
+        return k, v
+    return jax.vmap(per_layer)(params["layers"])     # [L, B, S, KV, D]
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict,
+            remat: bool = True, constraint=None,
+            return_hidden: bool = False) -> jnp.ndarray:
+    """Training / prefill forward -> logits [B, S, V] (or hidden [B, S, D]
+    when return_hidden=True, so the loss can chunk the vocab projection)."""
+    x = embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.encoder_layers:
+        enc_out = _encode(cfg, params, batch["frames"])
+        # cross K/V are computed per scanned layer from stacked params
+        ekv = encoder_kv(cfg, params, enc_out)
+
+        windows = jnp.zeros((cfg.num_layers,), jnp.int32)
+
+        def body(carry, xs):
+            layer, window, (ek, ev) = xs
+            y = _block(cfg, carry, layer, positions, window, enc_kv=(ek, ev),
+                       constraint=constraint)
+            if constraint is not None:
+                y = constraint(y)
+            return y, ()
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x,
+                            (params["layers"], windows, ekv))
+    else:
+        x = _scan_blocks(cfg, params, x, positions, remat=remat,
+                         constraint=constraint)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    return x @ lm_head(cfg, params)
+
+
+def lm_head(cfg: ModelConfig, params: Params) -> jnp.ndarray:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ======================================================================
+# decode (serve_step)
+# ======================================================================
+def init_caches(cfg: ModelConfig, batch_size: int, max_len: int) -> Dict:
+    """Decode caches, ShapeDtypeStruct-compatible (built with jnp.zeros).
+
+    Sliding-window attention uses a ring buffer of the window size — this is
+    what makes mixtral/hymba long_500k decode O(window) instead of O(seq).
+    """
+    caches: Dict = {}
+    kvl = cfg.num_kv_heads * 0 or None
+    if cfg.has_attention:
+        s = max_len
+        if cfg.sliding_window and not cfg.full_attn_layers:
+            s = min(max_len, cfg.sliding_window)
+        caches["k"] = jnp.zeros(
+            (cfg.num_layers, batch_size, s, cfg.num_kv_heads, cfg.head_dim_),
+            L.DTYPE)
+        caches["v"] = jnp.zeros_like(caches["k"])
+    if cfg.has_ssm:
+        caches["conv"] = jnp.zeros(
+            (cfg.num_layers, batch_size, cfg.ssm_conv - 1, cfg.d_inner_),
+            L.DTYPE)
+        caches["ssm"] = jnp.zeros(
+            (cfg.num_layers, batch_size, cfg.d_inner_, cfg.ssm_state),
+            jnp.float32)
+    if cfg.encoder_layers:
+        caches["cross_k"] = jnp.zeros(
+            (cfg.num_layers, batch_size, cfg.encoder_seq, cfg.num_kv_heads,
+             cfg.head_dim_), L.DTYPE)
+        caches["cross_v"] = jnp.zeros_like(caches["cross_k"])
+    return caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jnp.ndarray,
+                cache_len: jnp.ndarray, caches: Dict) -> Tuple:
+    """One decode step: token [B,1] int32, cache_len [B] -> (logits, caches).
+
+    Scans over layers carrying the per-layer cache slices.
+    """
+    x = params["embed"][token]
+    windows = layer_windows(cfg)
+    windows = jnp.zeros((cfg.num_layers,), jnp.int32) if windows is None \
+        else jnp.asarray(windows)
+
+    def body(carry, xs):
+        layer, window, cache = xs
+        y, new_cache = _decode_block(cfg, carry, layer, window, cache,
+                                     cache_len)
+        return y, new_cache
+
+    per_layer_caches = {k: v for k, v in caches.items()}
+    x, new_caches = jax.lax.scan(
+        body, x, (params["layers"], windows, per_layer_caches))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_caches
+
+
+def _decode_block(cfg: ModelConfig, x, layer, window, cache, cache_len):
+    new_cache = dict(cache)
+    if cfg.family == "ssm":
+        h = L.rms_norm(x, layer["ssm_norm"], cfg.norm_eps)
+        y, conv, ssm = L.mamba_decode(layer["ssm"], cfg, h,
+                                      cache["conv"], cache["ssm"])
+        new_cache["conv"], new_cache["ssm"] = conv, ssm
+        x = x + y
+    elif cfg.family == "hybrid":
+        h = L.rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        attn_out, kc, vc = L.attention_decode(
+            layer["attn"], cfg, h, cache["k"], cache["v"], cache_len,
+            window=_window_or_none(window))
+        h2 = L.rms_norm(x, layer["ssm_norm"], cfg.norm_eps)
+        ssm_out, conv, ssm = L.mamba_decode(layer["ssm"], cfg, h2,
+                                            cache["conv"], cache["ssm"])
+        new_cache.update(k=kc, v=vc, conv=conv, ssm=ssm)
+        x = x + attn_out + ssm_out
+    else:
+        h = L.rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        out, kc, vc = L.attention_decode(
+            layer["attn"], cfg, h, cache["k"], cache["v"], cache_len,
+            window=_window_or_none(window))
+        new_cache.update(k=kc, v=vc)
+        x = x + out
+    if "cross_k" in cache:
+        h = L.rms_norm(x, layer["cross_norm"], cfg.norm_eps)
+        x = x + L.cross_attention(layer["cross_attn"], cfg, h,
+                                  (cache["cross_k"], cache["cross_v"]))
+    if cfg.is_moe:
+        h = L.rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + L.moe(layer["moe"], cfg, h)
+    elif cfg.d_ff > 0:
+        h = L.rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + L.mlp(layer["mlp"], cfg, h)
+    return x, new_cache

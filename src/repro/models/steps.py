@@ -1,0 +1,118 @@
+"""Train / prefill / decode step functions (the units the dry-run lowers).
+
+``make_train_step`` returns a pure function
+    (state, batch) -> (state, metrics)
+with remat'd scanned layers, global-norm clipping and AdamW.  Optional
+gradient accumulation scans over microbatches.  ``make_serve_step`` returns
+the single-token decode step against dense caches (ring-buffer caches for
+pure-SWA archs).  ``make_prefill_step`` is the no-grad forward.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig, ParallelConfig, TrainConfig
+from ..optim import adamw
+from . import model as M
+
+
+def _pick_chunks(s: int, target: int = 512) -> int:
+    if s <= target:
+        return s
+    for c in range(target, 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def make_loss_fn(cfg: ModelConfig, parallel: ParallelConfig,
+                 constraint=None):
+    """Next-token CE with the vocab projection chunked over the sequence —
+    the full [B, S, V] fp32 logits tensor never materialises."""
+    def loss_fn(params, batch):
+        hidden = M.forward(cfg, params, batch, remat=parallel.remat,
+                           constraint=constraint, return_hidden=True)
+        head = M.lm_head(cfg, params)
+        targets = batch["targets"]
+        b, s, d = hidden.shape
+        c = _pick_chunks(s)
+        nb = s // c
+        h_c = hidden.reshape(b, nb, c, d).transpose(1, 0, 2, 3)
+        t_c = targets.reshape(b, nb, c).transpose(1, 0, 2)
+
+        def chunk(acc, xs):
+            h, t = xs
+            logits = (h @ head).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+            return acc + jnp.sum(logz - gold), ()
+
+        total, _ = jax.lax.scan(jax.checkpoint(chunk),
+                                jnp.zeros((), jnp.float32), (h_c, t_c))
+        return total / float(b * s)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig,
+                    parallel: ParallelConfig, constraint=None):
+    loss_fn = make_loss_fn(cfg, parallel, constraint)
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params, opt = state["params"], state["opt"]
+        if parallel.grad_accum > 1:
+            n = parallel.grad_accum
+
+            def micro(acc, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   jax.tree.map(
+                                       lambda g: g.astype(jnp.float32) / n,
+                                       grads))
+                return acc, loss
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, zeros, micro_batches)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt, om = adamw.update(grads, opt, tc)
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, parallel: ParallelConfig,
+                      constraint=None):
+    def prefill_step(params, batch):
+        # inference forward — remat off (no backward pass to feed); only the
+        # final position needs the vocab projection
+        hidden = M.forward(cfg, params, batch, remat=False,
+                           constraint=constraint, return_hidden=True)
+        return hidden[:, -1, :] @ M.lm_head(cfg, params)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, cache_len, caches):
+        logits, caches = M.decode_step(cfg, params, token, cache_len, caches)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, caches
+    return serve_step
+
+
+def init_state(key, cfg: ModelConfig) -> Dict:
+    params = M.init_params(key, cfg)
+    return {"params": params, "opt": adamw.init(params)}
+
+
+def state_shapes(cfg: ModelConfig) -> Dict:
+    return jax.eval_shape(lambda k: init_state(k, cfg),
+                          jax.random.PRNGKey(0))

@@ -1,0 +1,82 @@
+"""AdamW with fp32 master weights, global-norm clipping, cosine schedule.
+
+Built directly in JAX (no optax dependency in this environment).  The
+optimizer state is a pytree matching params:
+  master: fp32 copy of params   (source of truth)
+  mu, nu: fp32 Adam moments
+Params stay bf16 for compute; updates apply to master and are re-cast.
+This is the standard large-model recipe (and what the roofline memory
+analysis should account: 2 + 4+4+4 = 14 bytes/param).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    master: Any
+    mu: Any
+    nu: Any
+
+
+def init(params) -> OptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    master=jax.tree.map(f32, params),
+                    mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params))
+
+
+def cosine_schedule(tc: TrainConfig):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - tc.warmup_steps)
+                        / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+                        0.0, 1.0)
+        return tc.learning_rate * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(grads, state: OptState, tc: TrainConfig):
+    """One AdamW step. Returns (new_params_bf16, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = cosine_schedule(tc)(step)
+    b1, b2, eps = tc.beta1, tc.beta2, 1e-8
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + tc.weight_decay * p)
+        return m, v, p
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, state.master)
+    mu = jax.tree.map(lambda t: t[0], flat,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), master)
+    new_state = OptState(step=step, master=master, mu=mu, nu=nu)
+    return params, new_state, {"grad_norm": gnorm, "lr": lr}

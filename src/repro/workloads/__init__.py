@@ -1,0 +1,9 @@
+from .ycsb import (YCSB, WorkloadSpec, WorkloadResult, Ops, generate_ops,
+                   run_load, run_workload, mixed, zipf_probs, LevelSampler,
+                   READ, UPDATE, INSERT, SCAN, RMW)
+
+__all__ = [
+    "YCSB", "WorkloadSpec", "WorkloadResult", "Ops", "generate_ops",
+    "run_load", "run_workload", "mixed", "zipf_probs", "LevelSampler",
+    "READ", "UPDATE", "INSERT", "SCAN", "RMW",
+]

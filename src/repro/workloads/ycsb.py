@@ -1,0 +1,243 @@
+"""YCSB-style workload generation + closed-loop client runner.
+
+The six core workloads (§4 Exp#1) and the W1-W4 mixes of Exp#2 are expressed
+as ``WorkloadSpec``s.  Key popularity follows a Zipf distribution with
+parameter alpha over *scrambled* key ranks (YCSB hashes keys, so hot keys are
+scattered across the key space and therefore across SSTs).  Workload D reads
+the most recently inserted keys ("latest" distribution).
+
+The runner drives N closed-loop client processes against the simulated DB
+and records per-operation latency in virtual time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# op codes
+READ, UPDATE, INSERT, SCAN, RMW = 0, 1, 2, 3, 4
+OP_NAMES = {READ: "read", UPDATE: "update", INSERT: "insert",
+            SCAN: "scan", RMW: "rmw"}
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    name: str
+    read: float = 0.0
+    update: float = 0.0
+    insert: float = 0.0
+    scan: float = 0.0
+    rmw: float = 0.0
+    dist: str = "zipf"        # "zipf" | "latest"
+    alpha: float = 0.9
+    scan_max: int = 100
+
+    def mix(self):
+        return np.array([self.read, self.update, self.insert,
+                         self.scan, self.rmw], dtype=np.float64)
+
+
+# The six YCSB core workloads (Exp#1), alpha=0.9 per the paper ([28] default)
+YCSB = {
+    "A": WorkloadSpec("A", read=0.5, update=0.5),
+    "B": WorkloadSpec("B", read=0.95, update=0.05),
+    "C": WorkloadSpec("C", read=1.0),
+    "D": WorkloadSpec("D", read=0.95, insert=0.05, dist="latest"),
+    "E": WorkloadSpec("E", scan=0.95, insert=0.05),
+    "F": WorkloadSpec("F", read=0.5, rmw=0.5),
+}
+
+
+def mixed(name: str, read_frac: float, alpha: float) -> WorkloadSpec:
+    """Exp#2-4 style workloads: read/update mixes at a given skewness."""
+    return WorkloadSpec(name, read=read_frac, update=1.0 - read_frac,
+                        alpha=alpha)
+
+
+def zipf_probs(n: int, alpha: float) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return p / p.sum()
+
+
+@dataclass
+class Ops:
+    codes: np.ndarray       # int8 op codes
+    args: np.ndarray        # int64: zipf rank / recency offset / scan len<<32|rank
+    scan_lens: np.ndarray   # int32
+
+
+def generate_ops(spec: WorkloadSpec, n_ops: int, n_keys: int,
+                 seed: int = 0) -> Ops:
+    rng = np.random.default_rng(seed)
+    codes = rng.choice(5, size=n_ops, p=spec.mix() / spec.mix().sum())
+    p = zipf_probs(n_keys, spec.alpha)
+    ranks = rng.choice(n_keys, size=n_ops, p=p)
+    scan_lens = rng.integers(1, spec.scan_max + 1, size=n_ops,
+                             dtype=np.int32)
+    return Ops(codes=codes.astype(np.int8), args=ranks.astype(np.int64),
+               scan_lens=scan_lens)
+
+
+@dataclass
+class WorkloadResult:
+    name: str
+    scheme: str
+    n_ops: int
+    duration: float
+    throughput: float                     # OPS in virtual time
+    latency_p: Dict[str, float]           # percentiles over all ops
+    read_latency_p: Dict[str, float]      # percentiles over reads only
+    op_counts: Dict[str, int]
+    extras: Dict[str, float]
+
+    def row(self) -> str:
+        return (f"{self.scheme:7s} {self.name:6s} ops={self.n_ops} "
+                f"dur={self.duration:9.3f}s thpt={self.throughput:10.1f} OPS "
+                f"p99={self.latency_p.get('p99', 0)*1e3:8.3f}ms")
+
+
+_PCTS = {"p50": 50, "p90": 90, "p99": 99, "p999": 99.9, "p9999": 99.99}
+
+
+def _pct(lat: np.ndarray) -> Dict[str, float]:
+    if len(lat) == 0:
+        return {k: 0.0 for k in _PCTS}
+    return {k: float(np.percentile(lat, q)) for k, q in _PCTS.items()}
+
+
+def run_load(db, n_keys: int, num_clients: int = 16, seed: int = 42,
+             sampler=None) -> WorkloadResult:
+    """Load phase: insert all keys in scrambled order."""
+    rng = np.random.default_rng(seed)
+    load_order = rng.permutation(n_keys).astype(np.int64)
+    db.load_order = load_order          # recency mapping for workload D
+    tree, sim = db.tree, db.sim
+    t0 = sim.now
+    lat: List[float] = []
+    cursor = {"i": 0}
+
+    def client():
+        while True:
+            i = cursor["i"]
+            if i >= n_keys:
+                return
+            cursor["i"] += 1
+            s = sim.now
+            yield from tree.put(int(load_order[i]))
+            lat.append(sim.now - s)
+
+    procs = [sim.process(client()) for _ in range(num_clients)]
+    for p in procs:
+        sim.run_until(p)
+    dur = sim.now - t0
+    lat_arr = np.asarray(lat)
+    return WorkloadResult(
+        name="load", scheme=db.scheme, n_ops=n_keys, duration=dur,
+        throughput=n_keys / max(dur, 1e-12), latency_p=_pct(lat_arr),
+        read_latency_p={}, op_counts={"insert": n_keys},
+        extras={})
+
+
+def run_workload(db, spec: WorkloadSpec, n_ops: int, n_keys: int,
+                 num_clients: int = 16, seed: int = 1) -> WorkloadResult:
+    """Run phase: closed-loop clients over a pre-generated op stream."""
+    ops = generate_ops(spec, n_ops, n_keys, seed=seed)
+    # scrambled popularity: zipf rank -> key id
+    scramble = np.random.default_rng(seed + 1).permutation(n_keys).astype(np.int64)
+    load_order = getattr(db, "load_order", np.arange(n_keys, dtype=np.int64))
+    tree, sim = db.tree, db.sim
+    frontier = {"n": n_keys}          # total inserted keys (for D/E inserts)
+    t0 = sim.now
+    lat = np.zeros(n_ops, np.float64)
+    cursor = {"i": 0}
+    counts = {name: 0 for name in OP_NAMES.values()}
+
+    def resolve(code: int, rank: int) -> int:
+        if spec.dist == "latest" and code == READ:
+            # most-recent first: offset `rank` back from the insert frontier
+            off = frontier["n"] - 1 - rank
+            if off < 0:
+                off = 0
+            return int(load_order[off]) if off < n_keys else off
+        return int(scramble[rank % n_keys])
+
+    def client():
+        while True:
+            i = cursor["i"]
+            if i >= n_ops:
+                return
+            cursor["i"] += 1
+            code = int(ops.codes[i])
+            rank = int(ops.args[i])
+            s = sim.now
+            if code == READ:
+                yield from tree.get(resolve(code, rank))
+            elif code == UPDATE:
+                yield from tree.put(resolve(code, rank))
+            elif code == INSERT:
+                key = frontier["n"]
+                frontier["n"] += 1
+                yield from tree.put(key)
+            elif code == SCAN:
+                yield from tree.scan(resolve(code, rank),
+                                     int(ops.scan_lens[i]))
+            elif code == RMW:
+                key = resolve(code, rank)
+                yield from tree.get(key)
+                yield from tree.put(key)
+            counts[OP_NAMES[code]] += 1
+            lat[i] = sim.now - s
+
+    procs = [sim.process(client()) for _ in range(num_clients)]
+    for p in procs:
+        sim.run_until(p)
+    dur = sim.now - t0
+    reads_mask = ops.codes == READ
+    extras = {
+        "ssd_read_bytes": db.ssd.counters.read_bytes,
+        "hdd_read_bytes": db.hdd.counters.read_bytes,
+        "ssd_write_bytes": db.ssd.counters.write_bytes,
+        "hdd_write_bytes": db.hdd.counters.write_bytes,
+        "block_cache_hit_rate": tree.block_cache.hit_rate(),
+    }
+    if db.backend.cache is not None:
+        extras["ssd_cache_hits"] = db.backend.cache.hits
+        extras["ssd_cache_admitted"] = db.backend.cache.admitted
+    if db.backend.migrator is not None:
+        extras["migrated_bytes"] = db.backend.migrator.bytes_moved
+    return WorkloadResult(
+        name=spec.name, scheme=db.scheme, n_ops=n_ops, duration=dur,
+        throughput=n_ops / max(dur, 1e-12),
+        latency_p=_pct(lat), read_latency_p=_pct(lat[reads_mask]),
+        op_counts=counts, extras=extras)
+
+
+class LevelSampler:
+    """Samples actual level sizes every ``period`` (O1, Fig. 2a)."""
+
+    def __init__(self, db, period: float = 60.0):
+        self.db = db
+        self.period = period
+        self.samples: List[List[int]] = []
+        self.wal_samples: List[int] = []
+        db.sim.process(self._run())
+
+    def _run(self):
+        while True:
+            yield self.db.sim.timeout(self.period, daemon=True)
+            self.samples.append(self.db.tree.level_sizes())
+            self.wal_samples.append(self.db.backend.wal_zones_in_use())
+
+    def stats(self):
+        if not self.samples:
+            return None
+        arr = np.asarray(self.samples, dtype=np.float64)
+        return {
+            "min": arr.min(axis=0), "max": arr.max(axis=0),
+            "median": np.median(arr, axis=0),
+            "q1": np.percentile(arr, 25, axis=0),
+            "q3": np.percentile(arr, 75, axis=0),
+        }

@@ -1,0 +1,11 @@
+from .sim import Sim, Event, Process, Semaphore
+from .device import (
+    DeviceTiming, Zone, ZoneState, ZonedDevice, ZN540_SSD, ST14000_HDD,
+    MiB, KiB,
+)
+
+__all__ = [
+    "Sim", "Event", "Process", "Semaphore",
+    "DeviceTiming", "Zone", "ZoneState", "ZonedDevice",
+    "ZN540_SSD", "ST14000_HDD", "MiB", "KiB",
+]

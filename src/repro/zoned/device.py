@@ -1,0 +1,203 @@
+"""Zoned storage devices with the paper's timing model (Table 1).
+
+A ``ZonedDevice`` exposes the zoned interface of §2.1: fixed-capacity
+append-only zones with a write pointer, explicit reset, sequential writes
+only.  Service times come from a calibrated model:
+
+  sequential I/O : per-request submission overhead + bytes / bandwidth
+  random read    : 1/IOPS for the first 4 KiB (seek + transfer, calibrated
+                   against the measured fio IOPS) + remaining bytes / bandwidth
+
+Devices are FIFO resources: an I/O submitted while the device is busy queues
+behind earlier I/O — this is what creates the foreground/background
+interference the paper measures in Exp#6.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .sim import Event, Sim
+
+MiB = float(1 << 20)
+KiB = float(1 << 10)
+
+
+@dataclass(frozen=True)
+class DeviceTiming:
+    """Calibrated against Table 1 of the paper."""
+
+    seq_read_bw: float    # bytes/s
+    seq_write_bw: float   # bytes/s
+    rand_read_iops: float  # 4 KiB random read IOPS
+    seq_overhead: float   # per-request submission overhead, seconds
+
+    @property
+    def rand_read_base(self) -> float:
+        """Service time of a 4 KiB random read."""
+        return 1.0 / self.rand_read_iops
+
+
+# Table 1: WD Ultrastar DC ZN540 (ZNS SSD), Seagate ST14000NM0007 (HM-SMR HDD)
+ZN540_SSD = DeviceTiming(
+    seq_read_bw=1039.6 * MiB,
+    seq_write_bw=1002.8 * MiB,
+    rand_read_iops=16928.3,
+    seq_overhead=10e-6,
+)
+ST14000_HDD = DeviceTiming(
+    seq_read_bw=210.0 * MiB,
+    seq_write_bw=210.0 * MiB,
+    rand_read_iops=115.0,
+    seq_overhead=100e-6,
+)
+
+
+class ZoneState(enum.Enum):
+    EMPTY = "empty"
+    OPEN = "open"
+    FULL = "full"
+
+
+@dataclass
+class Zone:
+    zid: int
+    capacity: int                  # writable zone capacity, bytes
+    write_ptr: int = 0
+    state: ZoneState = ZoneState.EMPTY
+    owner: Optional[str] = None    # free-form tag: "wal", "cache", "sst:<id>"
+
+    @property
+    def remaining(self) -> int:
+        return self.capacity - self.write_ptr
+
+
+@dataclass
+class TrafficCounters:
+    read_bytes: float = 0.0
+    write_bytes: float = 0.0
+    read_ops: int = 0
+    write_ops: int = 0
+    busy_time: float = 0.0
+    by_tag_write: Dict[str, float] = field(default_factory=dict)
+    by_tag_read: Dict[str, float] = field(default_factory=dict)
+
+
+class ZonedDevice:
+    """Append-only zoned device + FIFO service queue in virtual time."""
+
+    def __init__(self, sim: Sim, name: str, timing: DeviceTiming,
+                 num_zones: int, zone_capacity: int):
+        self.sim = sim
+        self.name = name
+        self.timing = timing
+        self.zone_capacity = zone_capacity
+        self.zones: List[Zone] = [Zone(zid=i, capacity=zone_capacity)
+                                  for i in range(num_zones)]
+        self._busy_until = 0.0
+        self._bg_busy_until = 0.0
+        self.counters = TrafficCounters()
+        self.resets = 0
+
+    # ------------------------------------------------------------------
+    # zone management (the zoned interface)
+    # ------------------------------------------------------------------
+    def empty_zones(self) -> List[Zone]:
+        return [z for z in self.zones if z.state == ZoneState.EMPTY]
+
+    def num_empty(self) -> int:
+        return sum(1 for z in self.zones if z.state == ZoneState.EMPTY)
+
+    def alloc_zone(self, owner: str) -> Zone:
+        for z in self.zones:
+            if z.state == ZoneState.EMPTY:
+                z.state = ZoneState.OPEN
+                z.owner = owner
+                return z
+        raise RuntimeError(f"{self.name}: no empty zone for {owner!r}")
+
+    def reset_zone(self, zone: Zone) -> None:
+        """Reset: write pointer back to start; all data in the zone is gone."""
+        zone.write_ptr = 0
+        zone.state = ZoneState.EMPTY
+        zone.owner = None
+        self.resets += 1
+
+    def finish_zone(self, zone: Zone) -> None:
+        zone.state = ZoneState.FULL
+
+    # ------------------------------------------------------------------
+    # timed I/O
+    # ------------------------------------------------------------------
+    def _service_time(self, nbytes: float, kind: str) -> float:
+        t = self.timing
+        if kind == "seq_read":
+            return t.seq_overhead + nbytes / t.seq_read_bw
+        if kind == "seq_write":
+            return t.seq_overhead + nbytes / t.seq_write_bw
+        if kind == "rand_read":
+            extra = max(0.0, nbytes - 4 * KiB)
+            return t.rand_read_base + extra / t.seq_read_bw
+        raise ValueError(kind)
+
+    def io(self, nbytes: float, kind: str, tag: str = "",
+           background: bool = False) -> Event:
+        """Submit an I/O; returns an Event fired at completion.
+
+        Foreground I/O queues FIFO.  Background I/O (rate-limited migration,
+        cache-zone fills) models the drive's internal scheduler merging it
+        into the stream: it completes on its own background track but still
+        consumes device capacity — foreground feels it as added busy time.
+        """
+        service = self._service_time(nbytes, kind)
+        if background:
+            start = max(self.sim.now, self._bg_busy_until)
+            end = start + service
+            self._bg_busy_until = end
+            # capacity interference: foreground queue grows by the same work
+            self._busy_until = max(self._busy_until, self.sim.now) + service
+        else:
+            start = max(self.sim.now, self._busy_until)
+            end = start + service
+            self._busy_until = end
+        c = self.counters
+        c.busy_time += service
+        if kind.endswith("read"):
+            c.read_bytes += nbytes
+            c.read_ops += 1
+            if tag:
+                c.by_tag_read[tag] = c.by_tag_read.get(tag, 0.0) + nbytes
+        else:
+            c.write_bytes += nbytes
+            c.write_ops += 1
+            if tag:
+                c.by_tag_write[tag] = c.by_tag_write.get(tag, 0.0) + nbytes
+        return self.sim.timeout(end - self.sim.now)
+
+    def append(self, zone: Zone, nbytes: int, tag: str = "",
+               background: bool = False) -> Event:
+        """Sequential append at the zone's write pointer (§2.1)."""
+        if zone.state == ZoneState.FULL:
+            raise RuntimeError(f"{self.name}: append to FULL zone {zone.zid}")
+        if zone.state == ZoneState.EMPTY:
+            zone.state = ZoneState.OPEN
+        if nbytes > zone.remaining:
+            raise RuntimeError(
+                f"{self.name}: append {nbytes}B > remaining {zone.remaining}B "
+                f"in zone {zone.zid}")
+        zone.write_ptr += nbytes
+        if zone.remaining == 0:
+            zone.state = ZoneState.FULL
+        return self.io(nbytes, "seq_write", tag=tag, background=background)
+
+    def read(self, nbytes: float, random: bool, tag: str = "",
+             background: bool = False) -> Event:
+        return self.io(nbytes, "rand_read" if random else "seq_read",
+                       tag=tag, background=background)
+
+    # ------------------------------------------------------------------
+    def utilization(self) -> float:
+        if self.sim.now <= 0:
+            return 0.0
+        return self.counters.busy_time / self.sim.now

@@ -1,0 +1,35 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 real device;
+only the dry-run sets xla_force_host_platform_device_count (in a
+subprocess for its integration test)."""
+import numpy as np
+import pytest
+
+from repro.lsm import DB, ScenarioConfig
+from repro.lsm.tree import LSMConfig
+from repro.zoned.device import MiB
+
+
+def tiny_scenario(ssd_zones: int = 20, **kw) -> ScenarioConfig:
+    """Small fast scenario for correctness tests (64-object SSTs)."""
+    lsm = LSMConfig(
+        obj_size=1024, block_size=4096,
+        sst_size=int(0.0632 * MiB),
+        memtable_size=int(0.032 * MiB),
+        level_targets=(int(0.0632 * MiB),) * 2
+        + (int(0.632 * MiB), int(6.32 * MiB), int(63.2 * MiB)),
+        store_values=True, block_cache_blocks=8,
+    )
+    return ScenarioConfig(ssd_zones=ssd_zones,
+                          ssd_zone_cap=int(0.0673 * MiB),
+                          hdd_zones=4000, hdd_zone_cap=int(0.016 * MiB),
+                          lsm=lsm, **kw)
+
+
+@pytest.fixture
+def tiny_db():
+    return DB("HHZS", tiny_scenario(), store_values=True)
+
+
+@pytest.fixture(params=["B1", "B3", "AUTO", "P", "HHZS"])
+def any_db(request):
+    return DB(request.param, tiny_scenario(), store_values=True)

@@ -1,0 +1,63 @@
+"""Dry-run integration: lower+compile on a fake multi-device mesh.
+
+Runs in a subprocess because xla_force_host_platform_device_count must be
+set before jax initialises (the main pytest process keeps 1 device).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import json
+    import jax
+    from repro.launch.dryrun import lower_cell
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    rec = lower_cell("qwen3-1.7b", "train_4k", mesh, "test4x4")
+    print("RESULT " + json.dumps({
+        "status": rec["status"],
+        "dominant": rec["roofline"]["dominant"],
+        "flops": rec["roofline"]["flops_per_device"],
+        "colls": rec["collectives_by_op"],
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_cell_on_fake_mesh():
+    r = subprocess.run([sys.executable, "-c", SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    rec = json.loads(line[len("RESULT "):])
+    assert rec["status"] == "ok"
+    assert rec["flops"] > 1e12
+    assert any(op in rec["colls"] for op in
+               ("all-reduce", "reduce-scatter", "all-gather"))
+
+
+@pytest.mark.slow
+def test_production_mesh_shapes():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        m2 = make_production_mesh(multi_pod=True)
+        assert dict(m1.shape) == {"data": 16, "model": 16}
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+        print("MESH OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "MESH OK" in r.stdout

@@ -1,0 +1,133 @@
+"""HHZS core: demand accounting, tiering level, placement, cache, WAL."""
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from repro.core.hints import (CompactionDoneHint, CompactionOutputHint,
+                              CompactionTriggerHint)
+from repro.core.placement import HHZSPlacement
+from repro.lsm import DB
+
+
+def test_demand_accounting_balances():
+    db = DB("HHZS", tiny_scenario())
+    pl = db.backend.placement
+    pl.on_hint(CompactionTriggerHint(cid=1, selected_sst_ids=(1, 2, 3),
+                                     target_level=2))
+    assert pl.demand_of(2) == 3
+    pl.on_hint(CompactionOutputHint(cid=1, sst_id=9, level=2))
+    assert pl.demand_of(2) == 2
+    pl.on_hint(CompactionDoneHint(cid=1, target_level=2, num_selected=3,
+                                  num_generated=1))
+    assert pl.demand_of(2) == 0
+
+
+def test_demand_no_phantom_when_overgenerating():
+    """A compaction generating more SSTs than selected must not leak."""
+    db = DB("HHZS", tiny_scenario())
+    pl = db.backend.placement
+    pl.on_hint(CompactionTriggerHint(cid=7, selected_sst_ids=(1, 2),
+                                     target_level=1))
+    for sid in range(5):      # generated (5) > selected (2)
+        pl.on_hint(CompactionOutputHint(cid=7, sst_id=sid, level=1))
+    pl.on_hint(CompactionDoneHint(cid=7, target_level=1, num_selected=2,
+                                  num_generated=5))
+    assert pl.demand_of(1) == 0
+
+
+def test_demand_quiesces_after_load():
+    db = DB("HHZS", tiny_scenario())
+    for k in np.random.default_rng(0).permutation(3000):
+        db.put(int(k))
+    db.drain()
+    pl = db.backend.placement
+    for lvl in range(1, 5):
+        assert pl.demand_of(lvl) == 0, "no live compactions -> no demand"
+
+
+def test_tiering_level_math():
+    db = DB("HHZS", tiny_scenario())
+    pl = db.backend.placement
+    c = db.backend.c_ssd()
+    # no SSTs, no demand: everything fits -> tiering level = num_levels
+    assert pl.tiering_level() == pl.num_levels
+    # inject demand exceeding the SSD at L1
+    pl.on_hint(CompactionTriggerHint(cid=1, selected_sst_ids=tuple(range(c + 1)),
+                                     target_level=1))
+    assert pl.tiering_level() == 1
+    assert pl.reserved_for_tiering(1) <= c
+
+
+def test_flush_always_prefers_ssd():
+    db = DB("HHZS", tiny_scenario())
+    pl = db.backend.placement
+    assert pl.choose_tier(0, "flush") == "ssd"
+
+
+def test_reserved_zones_not_used_for_ssts():
+    db = DB("HHZS", tiny_scenario())
+    for k in np.random.default_rng(1).permutation(4000):
+        db.put(int(k))
+    db.drain()
+    be = db.backend
+    for sst in be.ssts.values():
+        if sst.tier == "ssd":
+            for z in sst.zones:
+                assert z.zid not in be.reserve_zids
+
+
+def test_wal_fits_in_reserved_zones():
+    db = DB("HHZS", tiny_scenario())
+    for k in np.random.default_rng(2).permutation(3000):
+        db.put(int(k))
+    # every WAL record lives in a reserved zone on the SSD
+    for rec in db.backend._wal_records:
+        assert rec["zone"].zid in db.backend.reserve_zids
+
+
+def test_basic_scheme_spills_wal_when_ssd_full():
+    db = DB("B3", tiny_scenario(ssd_zones=3))
+    for k in np.random.default_rng(3).permutation(3000):
+        db.put(int(k))
+    db.drain()
+    assert db.hdd.counters.by_tag_write.get("wal", 0) > 0
+
+
+def test_hinted_cache_admission_and_fifo():
+    db = DB("HHZS", tiny_scenario())
+    for k in np.random.default_rng(4).permutation(4000):
+        db.put(int(k))
+    db.flush_all()
+    # skewed reads to drive block-cache evictions -> SSD cache admissions
+    from repro.workloads import zipf_probs
+    p = zipf_probs(4000, 1.2)
+    keys = np.random.default_rng(5).choice(4000, size=6000, p=p)
+    for k in keys:
+        db.get(int(k))
+    db.drain()
+    c = db.backend.cache
+    assert c.admitted > 0
+    # mapping consistency: every mapped block's zone is a live cache zone
+    live = {z.zid for z in c.zones}
+    for (sid, blk), zid in c.mapping.items():
+        assert zid in live
+
+
+def test_cache_dropped_on_sst_death():
+    db = DB("HHZS", tiny_scenario())
+    c = db.backend.cache
+    # fabricate a mapping, then delete the SST id
+    c.mapping[(123, 0)] = 99
+    c.by_sst[123] = {0}
+    c.drop_sst(123)
+    assert (123, 0) not in c.mapping
+
+
+def test_auto_space_guards():
+    db = DB("AUTO", tiny_scenario())
+    pl = db.backend.placement
+    pl.max_level = 4
+    # exhaust SSD zones -> below 8% remaining -> no SST writes to SSD
+    while db.ssd.num_empty() > 1:
+        z = db.ssd.alloc_zone("x")
+    assert pl.choose_tier(0, "flush") == "hdd"

@@ -1,0 +1,95 @@
+"""Workload-aware migration: priorities, triggers, preemption, rate limit."""
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from repro.core.migration import priority_key
+from repro.lsm import DB
+from repro.lsm.sstable import SST
+
+
+def _sst(sid, level, reads, birth=0.0):
+    keys = np.arange(sid * 100, sid * 100 + 10, dtype=np.uint64)
+    s = SST(sid=sid, level=level, keys=keys,
+            tombs=np.zeros(10, bool), obj_size=1024, block_size=4096,
+            birth=birth)
+    s.num_reads = reads
+    return s
+
+
+def test_priority_order():
+    now = 100.0
+    low_level_cold = _sst(1, 0, reads=0)
+    low_level_hot = _sst(2, 0, reads=500)
+    high_level_hot = _sst(3, 3, reads=9999)
+    ks = sorted([low_level_cold, low_level_hot, high_level_hot],
+                key=lambda s: priority_key(s, now))
+    # level dominates; within a level, read rate breaks ties
+    assert [s.sid for s in ks] == [2, 1, 3]
+
+
+def test_popularity_migration_promotes_hot_ssts():
+    db = DB("HHZS", tiny_scenario())
+    for k in np.random.default_rng(0).permutation(4000):
+        db.put(int(k))
+    db.flush_all()
+    # hammer HDD-resident data with reads until the trigger fires
+    from repro.workloads import zipf_probs
+    p = zipf_probs(4000, 1.0)
+    keys = np.random.default_rng(1).choice(4000, size=8000, p=p)
+    for k in keys:
+        db.get(int(k))
+    db.drain()
+    m = db.backend.migrator
+    assert m.popularity_moves + m.capacity_moves > 0
+
+
+def test_migration_preempted_by_compaction():
+    """A locked (compaction-selected) SST aborts an in-flight migration."""
+    db = DB("HHZS", tiny_scenario())
+    be = db.backend
+    sst = _sst(900, 3, reads=0)
+    sst.tier = "hdd"
+    sst.zones = be.alloc_sst_zones("hdd", sst.size_bytes, "sst:900")
+    be._register(sst)
+    m = be.migrator
+    proc = db.sim.process(m._migrate(sst, "ssd"))
+    db.sim.run(until=db.sim.now + 1e-4)
+    sst.locked = True          # compaction takes it mid-flight
+    ok = db.sim.run_until(proc)
+    assert ok is False and m.aborted >= 1
+    assert sst.tier == "hdd"
+    # destination zones were rolled back
+    assert be.ssd_empty_sst_zones() == be.c_ssd()
+
+
+def test_rate_limit_paces_migration():
+    db = DB("HHZS", tiny_scenario())
+    be = db.backend
+    sst = _sst(901, 3, reads=0)
+    sst.keys = np.arange(0, 64, dtype=np.uint64)   # 64 KiB SST
+    sst.tombs = np.zeros(64, bool)
+    sst.tier = "hdd"
+    sst.zones = be.alloc_sst_zones("hdd", sst.size_bytes, "sst:901")
+    be._register(sst)
+    m = be.migrator
+    t0 = db.sim.now
+    ok = db.sim.run_until(db.sim.process(m._migrate(sst, "ssd")))
+    assert ok is True and sst.tier == "ssd"
+    elapsed = db.sim.now - t0
+    expect = sst.size_bytes / m.rate_limit
+    assert elapsed >= expect * 0.9, "migration must respect the rate limit"
+
+
+def test_swap_hysteresis_blocks_marginal_swaps():
+    db = DB("HHZS", tiny_scenario())
+    be = db.backend
+    now = 1000.0
+    db.sim.now = now
+    hot = _sst(910, 3, reads=100, birth=0.0)
+    cold = _sst(911, 3, reads=95, birth=0.0)
+    hot.tier, cold.tier = "hdd", "ssd"
+    m = be.migrator
+    assert not (hot.level < cold.level
+                or hot.read_rate(now) > cold.read_rate(now)
+                * m.swap_hysteresis)

@@ -1,0 +1,64 @@
+"""HLO analyzer: flop/byte/collective parsing with loop trip scaling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import Roofline, analyze_hlo
+
+
+def _compile(f, *shapes):
+    return jax.jit(f).lower(*shapes).compile()
+
+
+def test_flops_scale_with_scan_trips():
+    def make(L):
+        def f(ws, x):
+            def body(c, w):
+                return jnp.tanh(c @ w), ()
+            y, _ = jax.lax.scan(jax.checkpoint(body), x, ws)
+            return jnp.sum(y ** 2)
+        return jax.grad(f)
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    flops = {}
+    for L in (4, 16):
+        ws = jax.ShapeDtypeStruct((L, 256, 256), jnp.float32)
+        st = analyze_hlo(_compile(make(L), ws, x).as_text(), 1,
+                         default_trip=L)
+        flops[L] = st.flops
+    assert flops[16] == pytest.approx(4 * flops[4], rel=0.05)
+    # ~4 matmuls (fwd + remat-fwd + 2 bwd) x 2*256^3 per layer
+    assert flops[4] == pytest.approx(4 * 4 * 2 * 256 ** 3, rel=0.3)
+
+
+def test_single_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((128, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 64), jnp.float32)
+    st = analyze_hlo(_compile(f, a, b).as_text(), 1)
+    assert st.flops == pytest.approx(2 * 128 * 512 * 64)
+
+
+def test_bytes_counted_on_control_path():
+    def f(a):
+        return jnp.sum(a * 2.0)
+    a = jax.ShapeDtypeStruct((1 << 20,), jnp.float32)
+    st = analyze_hlo(_compile(f, a).as_text(), 1)
+    # at least one read of the input
+    assert st.bytes_hbm >= 4 * (1 << 20)
+
+
+def test_roofline_terms_and_dominance():
+    rl = Roofline(arch="x", shape="train_4k", mesh="single", chips=256,
+                  flops_per_device=197e12,         # exactly 1 s of compute
+                  bytes_per_device=819e9 * 0.5,    # 0.5 s of memory
+                  collective_bytes=50e9 * 0.25,    # 0.25 s of collective
+                  model_flops_total=197e12 * 256 * 0.8)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(0.5)
+    assert rl.collective_s == pytest.approx(0.25)
+    assert rl.dominant == "compute"
+    assert rl.mfu == pytest.approx(0.8)
+    assert rl.useful_flops_ratio == pytest.approx(0.8)

@@ -1,0 +1,50 @@
+"""Workload generation + runner."""
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from repro.lsm import DB
+from repro.workloads import (YCSB, WorkloadSpec, generate_ops, run_load,
+                             run_workload, zipf_probs, READ, UPDATE, SCAN)
+
+
+def test_zipf_probs_normalised_and_skewed():
+    p = zipf_probs(1000, 0.9)
+    assert p.sum() == pytest.approx(1.0)
+    assert p[0] > p[99] > p[999]
+    # higher alpha -> more head mass
+    assert zipf_probs(1000, 1.2)[:10].sum() > p[:10].sum()
+
+
+def test_generate_ops_mix_and_determinism():
+    spec = YCSB["A"]
+    ops1 = generate_ops(spec, 10_000, 1000, seed=3)
+    ops2 = generate_ops(spec, 10_000, 1000, seed=3)
+    assert np.array_equal(ops1.codes, ops2.codes)
+    assert np.array_equal(ops1.args, ops2.args)
+    frac_read = (ops1.codes == READ).mean()
+    assert 0.45 < frac_read < 0.55
+    e = generate_ops(YCSB["E"], 5000, 1000, seed=1)
+    assert (e.codes == SCAN).mean() > 0.9
+
+
+def test_run_workload_end_to_end():
+    db = DB("HHZS", tiny_scenario())
+    n = 2000
+    load = run_load(db, n_keys=n, num_clients=8)
+    assert load.throughput > 0
+    db.flush_all()
+    res = run_workload(db, YCSB["B"], n_ops=500, n_keys=n, num_clients=8)
+    assert res.n_ops == 500
+    assert res.duration > 0
+    assert res.op_counts["read"] > 400
+    assert res.latency_p["p99"] >= res.latency_p["p50"] >= 0
+
+
+def test_latest_distribution_reads_recent():
+    db = DB("B3", tiny_scenario())
+    n = 2000
+    run_load(db, n_keys=n, num_clients=4)
+    db.flush_all()
+    res = run_workload(db, YCSB["D"], n_ops=400, n_keys=n, num_clients=4)
+    assert res.op_counts["read"] + res.op_counts["insert"] == 400
