@@ -1,0 +1,167 @@
+"""Frozen copy of the SEED DES kernel (pre-optimization), used only by
+benchmarks/sim_speed.py as the baseline for the speedup measurement.
+Do not import from production code.
+
+The storage substrate of the HHZS reproduction runs on virtual time: devices
+are FIFO resources, foreground clients and background jobs (flush, compaction,
+migration) are generator processes that ``yield`` events.  This keeps the
+LSM-tree / HHZS logic an exact, inspectable reproduction of the paper's
+control flow while producing throughput / latency numbers from the device
+timing model (Table 1 of the paper).
+
+Daemon events: periodic background pollers (migration ticks, AUTO's
+throughput monitor) schedule *daemon* timeouts that do not keep ``run()``
+alive — ``run()`` returns once only daemon events remain, i.e. when all real
+work (client ops, flush/compaction/migration I/O) has settled.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Callable, Generator, List, Optional, Tuple
+
+
+class Event:
+    """One-shot event; processes wait on it by ``yield``-ing it."""
+
+    __slots__ = ("sim", "triggered", "value", "_waiters")
+
+    def __init__(self, sim: "Sim"):
+        self.sim = sim
+        self.triggered = False
+        self.value: Any = None
+        self._waiters: List[Callable[[Any], None]] = []
+
+    def succeed(self, value: Any = None) -> "Event":
+        if self.triggered:
+            raise RuntimeError("event already triggered")
+        self.triggered = True
+        self.value = value
+        waiters, self._waiters = self._waiters, []
+        for cb in waiters:
+            cb(value)
+        return self
+
+    def add_callback(self, cb: Callable[[Any], None]) -> None:
+        if self.triggered:
+            cb(self.value)
+        else:
+            self._waiters.append(cb)
+
+
+class Process(Event):
+    """Drives a generator; the Process itself is an Event that fires on return."""
+
+    __slots__ = ("gen",)
+
+    def __init__(self, sim: "Sim", gen: Generator):
+        super().__init__(sim)
+        self.gen = gen
+        sim._immediate(self._step, None)
+
+    def _step(self, send_value: Any) -> None:
+        try:
+            ev = self.gen.send(send_value)
+        except StopIteration as stop:
+            self.succeed(getattr(stop, "value", None))
+            return
+        if not isinstance(ev, Event):
+            raise TypeError(f"process yielded non-event: {ev!r}")
+        ev.add_callback(self._step)
+
+
+class Sim:
+    """Event loop over virtual seconds."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, bool, Callable[[], None]]] = []
+        self._seq = 0
+        self._live = 0  # non-daemon entries in the heap
+
+    # -- scheduling -------------------------------------------------------
+    def _push(self, at: float, fn: Callable[[], None], daemon: bool) -> None:
+        self._seq += 1
+        if not daemon:
+            self._live += 1
+        heapq.heappush(self._heap, (at, self._seq, daemon, fn))
+
+    def _immediate(self, fn: Callable[[Any], None], value: Any) -> None:
+        self._push(self.now, lambda: fn(value), daemon=False)
+
+    def timeout(self, delay: float, value: Any = None,
+                daemon: bool = False) -> Event:
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        ev = Event(self)
+        self._push(self.now + delay, lambda: ev.succeed(value), daemon)
+        return ev
+
+    def event(self) -> Event:
+        return Event(self)
+
+    def process(self, gen: Generator) -> Process:
+        return Process(self, gen)
+
+    # -- running ----------------------------------------------------------
+    def _pop(self) -> Callable[[], None]:
+        at, _, daemon, fn = heapq.heappop(self._heap)
+        if not daemon:
+            self._live -= 1
+        self.now = at
+        return fn
+
+    def run(self, until: Optional[float] = None) -> None:
+        """Run until no *non-daemon* work remains (or virtual ``until``)."""
+        while self._heap and self._live > 0:
+            at = self._heap[0][0]
+            if until is not None and at > until:
+                self.now = until
+                return
+            self._pop()()
+        if until is not None:
+            self.now = until
+
+    def run_until(self, ev: Event) -> Any:
+        """Run until ``ev`` triggers (used by the synchronous KV facade)."""
+        daemon_only = 0
+        while not ev.triggered:
+            if not self._heap:
+                raise RuntimeError("deadlock: event never triggers")
+            if self._live == 0:
+                daemon_only += 1
+                if daemon_only > 1_000_000:
+                    raise RuntimeError(
+                        "livelock: only daemon events remain but the awaited "
+                        "event never triggers")
+            else:
+                daemon_only = 0
+            self._pop()()
+        return ev.value
+
+
+class Semaphore:
+    """Counting semaphore for background job thread pools."""
+
+    def __init__(self, sim: Sim, capacity: int):
+        self.sim = sim
+        self.capacity = capacity
+        self.in_use = 0
+        self._queue: List[Event] = []
+
+    def acquire(self) -> Event:
+        ev = self.sim.event()
+        if self.in_use < self.capacity:
+            self.in_use += 1
+            ev.succeed()
+        else:
+            self._queue.append(ev)
+        return ev
+
+    def release(self) -> None:
+        if self._queue:
+            ev = self._queue.pop(0)
+            ev.succeed()
+        else:
+            self.in_use -= 1
+            if self.in_use < 0:
+                raise RuntimeError("semaphore released below zero")

@@ -83,7 +83,32 @@ def storage_tables() -> str:
         out.append("```json")
         out.append(json.dumps(json.loads(p.read_text()), indent=1)[:4000])
         out.append("```")
+    sc = scenario_matrix_table()
+    if sc:
+        out.append("### scenario matrix (open-loop)")
+        out.append(sc)
     return "\n".join(out)
+
+
+def scenario_matrix_table() -> str:
+    """Open-loop ScenarioMatrix rows (results/storage/scenarios.json):
+    queueing-delay vs service-time decomposition per cell."""
+    p = Path("results/storage/scenarios.json")
+    if not p.exists():
+        return ""
+    rows = ["| cell | offered/s | thpt/s | p50 ms | p99 ms |"
+            " p99 queue ms | p99 service ms | max depth |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in json.loads(p.read_text()):
+        rows.append(
+            f"| {r['cell']} | {r['offered_rate']:.1f} "
+            f"| {r['throughput']:.1f} "
+            f"| {r['latency_p']['p50']*1e3:.1f} "
+            f"| {r['latency_p']['p99']*1e3:.1f} "
+            f"| {r['queue_p']['p99']*1e3:.1f} "
+            f"| {r['service_p']['p99']*1e3:.1f} "
+            f"| {r['max_queue_depth']} |")
+    return "\n".join(rows)
 
 
 if __name__ == "__main__":
@@ -93,3 +118,5 @@ if __name__ == "__main__":
     print(roofline_table())
     print("\n## Perf logs\n")
     print(perf_logs())
+    print("\n## Storage\n")
+    print(storage_tables())

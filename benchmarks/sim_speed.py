@@ -1,0 +1,169 @@
+"""DES kernel speed: optimized ``repro.zoned.sim`` vs the frozen seed kernel.
+
+The scenario-matrix sweeps (benchmarks/storage_exps.py, the open-loop
+ScenarioMatrix) are bottlenecked by the event loop, not by numpy work, so
+this benchmark times the kernel's hot paths head-to-head against the seed
+implementation vendored in ``benchmarks/_seed_sim.py``:
+
+  timer_churn     bench_table1-style: schedule N timeouts, drain with run()
+  process_chain   closed-loop clients yielding timeouts through run_until()
+  fifo_device     ZonedDevice-style busy-until FIFO I/O from processes
+  sem_pool        background-job semaphore handoff (acquire/release churn)
+  daemon_mix      real work interleaved with daemon pollers
+
+  PYTHONPATH=src python -m benchmarks.sim_speed
+  PYTHONPATH=src python -m benchmarks.sim_speed --repeat 5 --scale 2
+
+Prints one CSV row per (bench, kernel) plus the per-bench and geometric-mean
+speedups.  Exits non-zero if the geomean speedup is below the 1.5x target
+so CI/driver runs notice regressions.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+import time
+
+import benchmarks._seed_sim as seed_sim
+import repro.zoned.sim as opt_sim
+
+
+# ----------------------------------------------------------------------
+# workloads (kernel-parametric: everything goes through the public Sim API)
+# ----------------------------------------------------------------------
+def timer_churn(mod, n):
+    """bench_table1 shape: N pre-scheduled timeouts drained by run()."""
+    sim = mod.Sim()
+    t = sim.timeout
+    for i in range(n):
+        t(i * 1e-6)
+    sim.run()
+    return sim.now
+
+
+def process_chain(mod, n_procs, n_yields):
+    """Closed-loop clients: each op is a yield through run_until()."""
+    sim = mod.Sim()
+
+    def client():
+        for _ in range(n_yields):
+            yield sim.timeout(1e-6)
+
+    procs = [sim.process(client()) for _ in range(n_procs)]
+    for p in procs:
+        sim.run_until(p)
+    return sim.now
+
+
+def fifo_device(mod, n_clients, n_ops):
+    """ZonedDevice-style FIFO resource: busy-until queueing per request."""
+    sim = mod.Sim()
+    state = {"busy": 0.0}
+
+    def io(service):
+        start = max(sim.now, state["busy"])
+        end = start + service
+        state["busy"] = end
+        return sim.timeout(end - sim.now)
+
+    def client(i):
+        for k in range(n_ops):
+            yield io(1e-5 if (k + i) % 7 else 1e-4)
+
+    procs = [sim.process(client(i)) for i in range(n_clients)]
+    for p in procs:
+        sim.run_until(p)
+    return sim.now
+
+
+def sem_pool(mod, n_jobs, capacity):
+    """Background-job pool: semaphore acquire / timed work / release."""
+    sim = mod.Sim()
+    sem = mod.Semaphore(sim, capacity)
+
+    def job():
+        yield sem.acquire()
+        yield sim.timeout(1e-4)
+        sem.release()
+
+    for _ in range(n_jobs):
+        sim.process(job())
+    sim.run()
+    return sim.now
+
+
+def daemon_mix(mod, n_ops, n_pollers):
+    """Real work interleaved with daemon pollers (migration-tick shape)."""
+    sim = mod.Sim()
+
+    def poller():
+        while True:
+            yield sim.timeout(1e-3, daemon=True)
+
+    def worker():
+        for _ in range(n_ops):
+            yield sim.timeout(1e-5)
+
+    for _ in range(n_pollers):
+        sim.process(poller())
+    p = sim.process(worker())
+    sim.run_until(p)
+    return sim.now
+
+
+def benches(scale):
+    s = scale
+    return [
+        ("timer_churn", lambda m: timer_churn(m, 200_000 * s)),
+        ("process_chain", lambda m: process_chain(m, 64, 2_000 * s)),
+        ("fifo_device", lambda m: fifo_device(m, 32, 4_000 * s)),
+        ("sem_pool", lambda m: sem_pool(m, 60_000 * s, 12)),
+        ("daemon_mix", lambda m: daemon_mix(m, 100_000 * s, 8)),
+    ]
+
+
+def _time(fn, mod, repeat):
+    best = math.inf
+    ref = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        ref = fn(mod)
+        best = min(best, time.perf_counter() - t0)
+    return best, ref
+
+
+def run(repeat=3, scale=1, target=1.5):
+    rows = []
+    speedups = []
+    for name, fn in benches(scale):
+        t_seed, v_seed = _time(fn, seed_sim, repeat)
+        t_opt, v_opt = _time(fn, opt_sim, repeat)
+        assert abs(v_seed - v_opt) < 1e-9, \
+            f"{name}: virtual-time divergence seed={v_seed} opt={v_opt}"
+        sp = t_seed / t_opt
+        speedups.append(sp)
+        rows.append(f"sim_speed_{name},seed={t_seed*1e3:.1f}ms,"
+                    f"opt={t_opt*1e3:.1f}ms,speedup={sp:.2f}x")
+    geomean = math.exp(sum(math.log(s) for s in speedups) / len(speedups))
+    rows.append(f"sim_speed_geomean,,,{geomean:.2f}x")
+    return rows, geomean
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--target", type=float, default=1.5)
+    args = ap.parse_args(argv)
+    rows, geomean = run(args.repeat, args.scale, args.target)
+    for r in rows:
+        print(r)
+    ok = geomean >= args.target
+    print(f"[sim_speed] geomean speedup {geomean:.2f}x "
+          f"({'>=' if ok else '<'} target {args.target}x)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

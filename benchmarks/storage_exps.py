@@ -255,6 +255,50 @@ def bench_exp6() -> List[str]:
     return rows
 
 
+def bench_scenarios() -> List[str]:
+    """Open-loop scenario matrix: (scheme x workload x arrival) with the
+    queueing-delay / service-time decomposition the closed-loop YCSB runs
+    can't see.  Offered rates are calibrated from a closed-loop probe so
+    the bursty cells genuinely overload the store during bursts."""
+    from repro.workloads import (BurstyArrivals, PoissonArrivals,
+                                 ScenarioMatrix)
+
+    def db_factory(scheme, ssd_zones):
+        sc = ScenarioConfig(ssd_zones=ssd_zones)
+        db = DB(scheme, sc)
+        n = sc.paper_keys // (4 * KEY_DIV)
+        run_load(db, n_keys=n)
+        db.flush_all()
+        db.n_keys = n
+        return db
+
+    # closed-loop probe on the weakest scheme: its service rate anchors
+    # base (0.5x, stable) and burst (3x, overloaded) offered rates
+    probe = db_factory("B3", 20)
+    spec = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
+    pr = run_workload(probe, spec, n_ops=2000, n_keys=probe.n_keys)
+    svc = max(pr.throughput, 1e-6)
+    matrix = ScenarioMatrix(
+        schemes=["B3", "HHZS"],
+        workloads=[spec],
+        arrivals=[PoissonArrivals(0.5 * svc),
+                  BurstyArrivals(0.2 * svc, 3.0 * svc, on=60.0, off=240.0)],
+        ssd_zone_budgets=[20],
+        duration=1800.0, warmup=120.0,
+        db_factory=db_factory)
+    data = matrix.run(out=RESULTS / "scenarios.json")
+    rows = []
+    for r in data:
+        rows.append(_row(
+            f"scenarios_{r['cell']}",
+            r["latency_p"]["p99"] * 1e6,
+            f"offered={r['offered_rate']:.1f}/s"
+            f";thpt={r['throughput']:.1f}/s"
+            f";p99q={r['queue_p']['p99']*1e3:.1f}ms"
+            f";p99s={r['service_p']['p99']*1e3:.1f}ms"))
+    return rows
+
+
 ALL = {
     "table1": bench_table1,
     "fig2": bench_fig2,
@@ -264,6 +308,7 @@ ALL = {
     "exp4": bench_exp4,
     "exp5": bench_exp5,
     "exp6": bench_exp6,
+    "scenarios": bench_scenarios,
 }
 
 
@@ -275,6 +320,9 @@ def _rows_from_json(name: str, data) -> List[str]:
         if isinstance(node, dict):
             for k, v in node.items():
                 walk(f"{prefix}_{k}", v)
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                walk(f"{prefix}_{i}", v)
         elif isinstance(node, (int, float)):
             rows.append(_row(f"{name}{prefix}", 0.0, f"{node:.4g}"))
         else:

@@ -145,3 +145,21 @@ class DB:
     def drain(self) -> None:
         """Run the simulator until all background work settles."""
         self.sim.run()
+
+    # ---- open-loop facade (repro.workloads.runner) --------------------
+    @property
+    def now(self) -> float:
+        """Current virtual time, seconds."""
+        return self.sim.now
+
+    def submit(self, gen):
+        """Schedule an op generator without blocking (open-loop dispatch).
+
+        Returns the Process, itself an Event that fires on completion —
+        callers track in-flight ops instead of waiting synchronously.
+        """
+        return self.sim.process(gen)
+
+    def run_for(self, seconds: float) -> None:
+        """Advance virtual time by ``seconds`` (time-limited open-loop runs)."""
+        self.sim.run(until=self.sim.now + seconds)

@@ -1,0 +1,363 @@
+"""Open-loop workload engine + declarative scenario matrix.
+
+The paper evaluates HHZS only with closed-loop YCSB clients (ycsb.py):
+offered load self-throttles to the store's service rate, so queueing never
+builds up and the flush/compaction/migration interference shows only in
+service time.  Production KV stores face *open-loop* arrivals — requests
+keep coming whether or not the store keeps up — where the same interference
+surfaces as queueing delay and tail-latency blowup.
+
+This module adds:
+
+* Arrival processes: ``PoissonArrivals`` (memoryless), ``BurstyArrivals``
+  (on-off modulated Poisson: bursts over a base rate), ``RampArrivals``
+  (linearly ramping rate — diurnal load edges), all generating arrival
+  timestamps in virtual seconds from a seeded RNG.
+* ``run_open_loop``: arrivals enqueue ops; a bounded server pool (modelling
+  the store's request threads) services the queue.  Per-op accounting
+  splits total latency into *queueing delay* (arrival -> service start)
+  and *service time* (start -> completion), with a warm-up window excluded
+  from statistics and a virtual-time limit on the arrival stream.
+* ``ScenarioMatrix``: sweeps (scheme x workload x arrival x SSD-zone
+  budget) from a declarative spec, loads a fresh store per cell, and emits
+  JSON rows consumed by ``benchmarks/report.py``.
+
+Op semantics are shared with the closed-loop runner via ``OpStream`` —
+placement/migration/caching schemes see byte-identical request streams.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .ycsb import (OP_NAMES, READ, OpStream, WorkloadSpec, YCSB, _pct,
+                   collect_extras, run_load)
+
+
+# ======================================================================
+# arrival processes
+# ======================================================================
+class ArrivalProcess:
+    """Generates arrival timestamps in [0, duration) virtual seconds."""
+
+    name: str = "arrivals"
+
+    def times(self, rng: np.random.Generator,
+              duration: float) -> np.ndarray:
+        raise NotImplementedError
+
+    @staticmethod
+    def _poisson_times(rng, rate: float, start: float,
+                       end: float) -> np.ndarray:
+        """Homogeneous Poisson arrivals on [start, end)."""
+        span = end - start
+        if rate <= 0 or span <= 0:
+            return np.empty(0, np.float64)
+        out: List[np.ndarray] = []
+        t = start
+        # draw in chunks; extend until we pass `end`
+        chunk = max(16, int(rate * span * 1.2))
+        while t < end:
+            gaps = rng.exponential(1.0 / rate, size=chunk)
+            ts = t + np.cumsum(gaps)
+            out.append(ts)
+            t = ts[-1]
+        times = np.concatenate(out)
+        return times[times < end]
+
+
+@dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    """Memoryless arrivals at a constant offered rate (ops/virtual-s)."""
+
+    rate: float
+
+    @property
+    def name(self) -> str:
+        return f"poisson({self.rate:g})"
+
+    def times(self, rng, duration):
+        return self._poisson_times(rng, self.rate, 0.0, duration)
+
+
+@dataclass(frozen=True)
+class BurstyArrivals(ArrivalProcess):
+    """On-off modulated Poisson: ``burst_rate`` for ``on`` seconds, then
+    ``base_rate`` for ``off`` seconds, repeating — the classic open-loop
+    burst pattern where queues built during the burst drain (or don't)
+    during the off phase."""
+
+    base_rate: float
+    burst_rate: float
+    on: float
+    off: float
+
+    @property
+    def name(self) -> str:
+        return (f"bursty({self.base_rate:g}->{self.burst_rate:g},"
+                f"on={self.on:g},off={self.off:g})")
+
+    def times(self, rng, duration):
+        out: List[np.ndarray] = []
+        t = 0.0
+        while t < duration:
+            hi = min(t + self.on, duration)
+            out.append(self._poisson_times(rng, self.burst_rate, t, hi))
+            t = hi
+            if t >= duration:
+                break
+            hi = min(t + self.off, duration)
+            out.append(self._poisson_times(rng, self.base_rate, t, hi))
+            t = hi
+        return np.concatenate(out) if out else np.empty(0, np.float64)
+
+
+@dataclass(frozen=True)
+class RampArrivals(ArrivalProcess):
+    """Linearly ramping rate from ``start_rate`` to ``end_rate`` over the
+    run (diurnal load edge), via thinning of a max-rate Poisson stream."""
+
+    start_rate: float
+    end_rate: float
+
+    @property
+    def name(self) -> str:
+        return f"ramp({self.start_rate:g}->{self.end_rate:g})"
+
+    def times(self, rng, duration):
+        rmax = max(self.start_rate, self.end_rate)
+        cand = self._poisson_times(rng, rmax, 0.0, duration)
+        if not len(cand):
+            return cand
+        rate_t = self.start_rate + (self.end_rate - self.start_rate) \
+            * (cand / duration)
+        keep = rng.random(len(cand)) < rate_t / rmax
+        return cand[keep]
+
+
+# ======================================================================
+# open-loop runner
+# ======================================================================
+@dataclass
+class OpenLoopResult:
+    """Result of one open-loop run, with queueing/service decomposition."""
+
+    name: str                      # workload name
+    scheme: str
+    arrival: str
+    n_arrived: int
+    n_measured: int                # completed ops past warm-up
+    duration: float                # virtual seconds of arrivals
+    offered_rate: float            # arrivals / duration
+    throughput: float              # completed ops / busy span
+    latency_p: Dict[str, float]    # total sojourn (arrival -> done)
+    queue_p: Dict[str, float]      # queueing delay (arrival -> start)
+    service_p: Dict[str, float]    # service time   (start -> done)
+    read_latency_p: Dict[str, float]
+    max_queue_depth: int
+    op_counts: Dict[str, int]
+    extras: Dict[str, float]
+
+    def row(self) -> str:
+        return (f"{self.scheme:7s} {self.name:4s} {self.arrival:28s} "
+                f"offered={self.offered_rate:8.1f}/s "
+                f"thpt={self.throughput:8.1f}/s "
+                f"p99={self.latency_p.get('p99', 0)*1e3:9.2f}ms "
+                f"(queue {self.queue_p.get('p99', 0)*1e3:9.2f}ms / "
+                f"service {self.service_p.get('p99', 0)*1e3:8.2f}ms)")
+
+    def to_json(self) -> Dict:
+        return {
+            "workload": self.name, "scheme": self.scheme,
+            "arrival": self.arrival, "n_arrived": self.n_arrived,
+            "n_measured": self.n_measured, "duration": self.duration,
+            "offered_rate": self.offered_rate, "throughput": self.throughput,
+            "latency_p": self.latency_p, "queue_p": self.queue_p,
+            "service_p": self.service_p,
+            "read_latency_p": self.read_latency_p,
+            "max_queue_depth": self.max_queue_depth,
+            "op_counts": self.op_counts, "extras": self.extras,
+        }
+
+
+def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
+                  duration: float, n_keys: int, *, warmup: float = 0.0,
+                  max_concurrency: int = 64, seed: int = 1,
+                  drain: bool = True) -> OpenLoopResult:
+    """Open-loop run: ops arrive per ``arrival`` regardless of completion.
+
+    A bounded pool of ``max_concurrency`` server processes (the store's
+    request threads) pulls from the arrival queue; queueing delay is the
+    wait for a server, service time is the op's execution (which itself
+    includes device-queue interference from background jobs).  Ops arriving
+    before ``warmup`` complete normally but are excluded from statistics.
+    The arrival stream stops at ``duration``; with ``drain`` the queue is
+    serviced to empty afterwards (ops past the limit still complete).
+    With ``drain=False`` the run hard-stops at the time limit; ops still
+    queued or in flight are excluded from statistics but remain pending
+    work in the store — a later ``db.drain()`` or follow-up run on the
+    same DB executes them, exactly as real queued requests would.
+    """
+    sim = db.sim
+    rng = np.random.default_rng(seed + 2)
+    rel = arrival.times(rng, duration)
+    n = len(rel)
+    stream = OpStream(db, spec, n_ops=n, n_keys=n_keys, seed=seed)
+    t0 = sim.now
+    arrive = np.full(n, np.nan)
+    start = np.full(n, np.nan)
+    done = np.full(n, np.nan)
+    queue: deque = deque()
+    idle: List = []                       # events of parked servers
+    state = {"closed": False, "max_depth": 0}
+
+    def dispatcher():
+        for i in range(n):
+            at = t0 + float(rel[i])
+            if at > sim.now:
+                yield sim.timeout(at - sim.now)
+            arrive[i] = sim.now
+            queue.append(i)
+            if len(queue) > state["max_depth"]:
+                state["max_depth"] = len(queue)
+            if idle:
+                idle.pop().succeed()
+        state["closed"] = True
+        while idle:
+            idle.pop().succeed()
+
+    def server():
+        while True:
+            while not queue:
+                if state["closed"]:
+                    return
+                ev = sim.event()
+                idle.append(ev)
+                yield ev
+            i = queue.popleft()
+            start[i] = sim.now
+            yield from stream.execute(i)
+            done[i] = sim.now
+
+    procs = [db.submit(server()) for _ in range(max_concurrency)]
+    procs.append(db.submit(dispatcher()))
+    if drain:
+        for p in procs:
+            sim.run_until(p)
+    else:
+        # hard time limit: stop at the end of the arrival window; ops still
+        # queued or in flight are excluded from statistics below
+        db.run_for(t0 + duration - sim.now)
+    busy_span = max(sim.now - t0, 1e-12)
+
+    completed = ~np.isnan(done)
+    measured = completed & (arrive - t0 >= warmup)
+    total = done - arrive
+    qdel = start - arrive
+    serv = done - start
+    reads = (stream.ops.codes == READ) & measured
+    return OpenLoopResult(
+        name=spec.name, scheme=db.scheme, arrival=arrival.name,
+        n_arrived=n, n_measured=int(measured.sum()), duration=duration,
+        offered_rate=n / max(duration, 1e-12),
+        throughput=float(completed.sum()) / busy_span,
+        latency_p=_pct(total[measured]), queue_p=_pct(qdel[measured]),
+        service_p=_pct(serv[measured]),
+        read_latency_p=_pct(total[reads]),
+        max_queue_depth=state["max_depth"],
+        # snapshot: with drain=False the stream keeps mutating its counts
+        # if leftover queued ops execute on a later drain
+        op_counts=dict(stream.counts), extras=collect_extras(db))
+
+
+# ======================================================================
+# scenario matrix
+# ======================================================================
+@dataclass(frozen=True)
+class ScenarioCell:
+    """One fully-resolved cell of the matrix."""
+
+    scheme: str
+    workload: WorkloadSpec
+    arrival: ArrivalProcess
+    ssd_zones: int
+
+    @property
+    def name(self) -> str:
+        return (f"{self.scheme}/{self.workload.name}/"
+                f"{self.arrival.name}/z{self.ssd_zones}")
+
+
+@dataclass
+class ScenarioMatrix:
+    """Declarative sweep of (scheme x workload x arrival x SSD budget).
+
+    ``workloads`` entries may be YCSB letter keys ("A".."F") or full
+    ``WorkloadSpec``s.  Each cell gets a freshly loaded store (same
+    methodology as benchmarks/storage_exps.py: load, drain WAL, run while
+    the compaction backlog is live), then an open-loop run.  Rows land in
+    a JSON artifact consumed by ``benchmarks/report.py``.
+    """
+
+    schemes: Sequence[str]
+    workloads: Sequence[Union[str, WorkloadSpec]]
+    arrivals: Sequence[ArrivalProcess]
+    ssd_zone_budgets: Sequence[int] = (20,)
+    duration: float = 600.0            # virtual seconds of arrivals
+    warmup: float = 60.0
+    max_concurrency: int = 64
+    key_div: int = 1                   # dataset divisor (quick sweeps)
+    seed: int = 1
+    db_factory: Optional[object] = None   # (scheme, ssd_zones) -> loaded db
+    results: List[OpenLoopResult] = field(default_factory=list)
+
+    def _workload_spec(self, w) -> WorkloadSpec:
+        return YCSB[w] if isinstance(w, str) else w
+
+    def cells(self) -> List[ScenarioCell]:
+        return [ScenarioCell(s, self._workload_spec(w), a, z)
+                for s in self.schemes
+                for w in self.workloads
+                for a in self.arrivals
+                for z in self.ssd_zone_budgets]
+
+    def _fresh_db(self, scheme: str, ssd_zones: int):
+        if self.db_factory is not None:
+            return self.db_factory(scheme, ssd_zones)
+        from ..lsm import DB, ScenarioConfig
+        sc = ScenarioConfig(ssd_zones=ssd_zones)
+        db = DB(scheme, sc)
+        n_keys = sc.paper_keys // self.key_div
+        run_load(db, n_keys=n_keys)
+        db.flush_all()
+        db.n_keys = n_keys
+        return db
+
+    def run(self, out: Optional[Union[str, Path]] = None,
+            verbose: bool = True) -> List[Dict]:
+        rows: List[Dict] = []
+        for cell in self.cells():
+            db = self._fresh_db(cell.scheme, cell.ssd_zones)
+            res = run_open_loop(
+                db, cell.workload, cell.arrival, self.duration,
+                n_keys=getattr(db, "n_keys", db.scenario.paper_keys
+                               // self.key_div),
+                warmup=self.warmup, max_concurrency=self.max_concurrency,
+                seed=self.seed)
+            self.results.append(res)
+            row = res.to_json()
+            row["ssd_zones"] = cell.ssd_zones
+            row["cell"] = cell.name
+            rows.append(row)
+            if verbose:
+                print(res.row(), flush=True)
+        if out is not None:
+            out = Path(out)
+            out.parent.mkdir(parents=True, exist_ok=True)
+            out.write_text(json.dumps(rows, indent=1))
+        return rows

@@ -108,6 +108,79 @@ def _pct(lat: np.ndarray) -> Dict[str, float]:
     return {k: float(np.percentile(lat, q)) for k, q in _PCTS.items()}
 
 
+class OpStream:
+    """Pre-generated op stream + key resolution, shared by the closed-loop
+    runner below and the open-loop engine (``repro.workloads.runner``).
+
+    Key resolution semantics (scrambled Zipf popularity, "latest" reads
+    against the insert frontier, frontier-advancing inserts) live here so
+    every runner drives the tree identically.
+    """
+
+    def __init__(self, db, spec: WorkloadSpec, n_ops: int, n_keys: int,
+                 seed: int = 1):
+        self.spec = spec
+        self.ops = generate_ops(spec, n_ops, n_keys, seed=seed)
+        self.n_ops = n_ops
+        self.n_keys = n_keys
+        # scrambled popularity: zipf rank -> key id
+        self.scramble = np.random.default_rng(seed + 1) \
+            .permutation(n_keys).astype(np.int64)
+        self.load_order = getattr(db, "load_order",
+                                  np.arange(n_keys, dtype=np.int64))
+        self.frontier = n_keys            # total inserted keys (D/E inserts)
+        self.tree = db.tree
+        self.counts = {name: 0 for name in OP_NAMES.values()}
+
+    def resolve(self, code: int, rank: int) -> int:
+        if self.spec.dist == "latest" and code == READ:
+            # most-recent first: offset `rank` back from the insert frontier
+            off = self.frontier - 1 - rank
+            if off < 0:
+                off = 0
+            return int(self.load_order[off]) if off < self.n_keys else off
+        return int(self.scramble[rank % self.n_keys])
+
+    def execute(self, i: int):
+        """Generator running op ``i`` against the tree (virtual-timed)."""
+        code = int(self.ops.codes[i])
+        rank = int(self.ops.args[i])
+        if code == READ:
+            yield from self.tree.get(self.resolve(code, rank))
+        elif code == UPDATE:
+            yield from self.tree.put(self.resolve(code, rank))
+        elif code == INSERT:
+            key = self.frontier
+            self.frontier += 1
+            yield from self.tree.put(key)
+        elif code == SCAN:
+            yield from self.tree.scan(self.resolve(code, rank),
+                                      int(self.ops.scan_lens[i]))
+        elif code == RMW:
+            key = self.resolve(code, rank)
+            yield from self.tree.get(key)
+            yield from self.tree.put(key)
+        self.counts[OP_NAMES[code]] += 1
+
+
+def collect_extras(db) -> Dict[str, float]:
+    """Device/cache/migration counters attached to every result row."""
+    tree = db.tree
+    extras = {
+        "ssd_read_bytes": db.ssd.counters.read_bytes,
+        "hdd_read_bytes": db.hdd.counters.read_bytes,
+        "ssd_write_bytes": db.ssd.counters.write_bytes,
+        "hdd_write_bytes": db.hdd.counters.write_bytes,
+        "block_cache_hit_rate": tree.block_cache.hit_rate(),
+    }
+    if db.backend.cache is not None:
+        extras["ssd_cache_hits"] = db.backend.cache.hits
+        extras["ssd_cache_admitted"] = db.backend.cache.admitted
+    if db.backend.migrator is not None:
+        extras["migrated_bytes"] = db.backend.migrator.bytes_moved
+    return extras
+
+
 def run_load(db, n_keys: int, num_clients: int = 16, seed: int = 42,
              sampler=None) -> WorkloadResult:
     """Load phase: insert all keys in scrambled order."""
@@ -144,25 +217,11 @@ def run_load(db, n_keys: int, num_clients: int = 16, seed: int = 42,
 def run_workload(db, spec: WorkloadSpec, n_ops: int, n_keys: int,
                  num_clients: int = 16, seed: int = 1) -> WorkloadResult:
     """Run phase: closed-loop clients over a pre-generated op stream."""
-    ops = generate_ops(spec, n_ops, n_keys, seed=seed)
-    # scrambled popularity: zipf rank -> key id
-    scramble = np.random.default_rng(seed + 1).permutation(n_keys).astype(np.int64)
-    load_order = getattr(db, "load_order", np.arange(n_keys, dtype=np.int64))
-    tree, sim = db.tree, db.sim
-    frontier = {"n": n_keys}          # total inserted keys (for D/E inserts)
+    stream = OpStream(db, spec, n_ops, n_keys, seed=seed)
+    sim = db.sim
     t0 = sim.now
     lat = np.zeros(n_ops, np.float64)
     cursor = {"i": 0}
-    counts = {name: 0 for name in OP_NAMES.values()}
-
-    def resolve(code: int, rank: int) -> int:
-        if spec.dist == "latest" and code == READ:
-            # most-recent first: offset `rank` back from the insert frontier
-            off = frontier["n"] - 1 - rank
-            if off < 0:
-                off = 0
-            return int(load_order[off]) if off < n_keys else off
-        return int(scramble[rank % n_keys])
 
     def client():
         while True:
@@ -170,49 +229,20 @@ def run_workload(db, spec: WorkloadSpec, n_ops: int, n_keys: int,
             if i >= n_ops:
                 return
             cursor["i"] += 1
-            code = int(ops.codes[i])
-            rank = int(ops.args[i])
             s = sim.now
-            if code == READ:
-                yield from tree.get(resolve(code, rank))
-            elif code == UPDATE:
-                yield from tree.put(resolve(code, rank))
-            elif code == INSERT:
-                key = frontier["n"]
-                frontier["n"] += 1
-                yield from tree.put(key)
-            elif code == SCAN:
-                yield from tree.scan(resolve(code, rank),
-                                     int(ops.scan_lens[i]))
-            elif code == RMW:
-                key = resolve(code, rank)
-                yield from tree.get(key)
-                yield from tree.put(key)
-            counts[OP_NAMES[code]] += 1
+            yield from stream.execute(i)
             lat[i] = sim.now - s
 
     procs = [sim.process(client()) for _ in range(num_clients)]
     for p in procs:
         sim.run_until(p)
     dur = sim.now - t0
-    reads_mask = ops.codes == READ
-    extras = {
-        "ssd_read_bytes": db.ssd.counters.read_bytes,
-        "hdd_read_bytes": db.hdd.counters.read_bytes,
-        "ssd_write_bytes": db.ssd.counters.write_bytes,
-        "hdd_write_bytes": db.hdd.counters.write_bytes,
-        "block_cache_hit_rate": tree.block_cache.hit_rate(),
-    }
-    if db.backend.cache is not None:
-        extras["ssd_cache_hits"] = db.backend.cache.hits
-        extras["ssd_cache_admitted"] = db.backend.cache.admitted
-    if db.backend.migrator is not None:
-        extras["migrated_bytes"] = db.backend.migrator.bytes_moved
+    reads_mask = stream.ops.codes == READ
     return WorkloadResult(
         name=spec.name, scheme=db.scheme, n_ops=n_ops, duration=dur,
         throughput=n_ops / max(dur, 1e-12),
         latency_p=_pct(lat), read_latency_p=_pct(lat[reads_mask]),
-        op_counts=counts, extras=extras)
+        op_counts=stream.counts, extras=collect_extras(db))
 
 
 class LevelSampler:

@@ -11,37 +11,67 @@ Daemon events: periodic background pollers (migration ticks, AUTO's
 throughput monitor) schedule *daemon* timeouts that do not keep ``run()``
 alive — ``run()`` returns once only daemon events remain, i.e. when all real
 work (client ops, flush/compaction/migration I/O) has settled.
+
+Hot-path design (benchmarked by ``benchmarks/sim_speed.py``):
+
+* **Slim heap entries.**  An entry is ``(at, seq, daemon, event, value)``:
+  popping calls ``event.succeed(value)`` directly, so ``timeout()`` allocates
+  no per-entry closure (the seed kernel built a lambda per scheduled event).
+* **Single-waiter fast path.**  Almost every event has exactly one waiter
+  (the process step that yielded it).  ``Event`` keeps that one callback in
+  a dedicated ``_cb`` slot and only allocates a waiter list on the second
+  subscriber.
+* **Batched same-timestamp dispatch.**  ``run()`` / ``run_until()`` hoist
+  heap/attribute lookups into locals and drain ready entries in a tight
+  loop instead of re-entering a method call per event.
 """
 from __future__ import annotations
 
-import heapq
-from typing import Any, Callable, Generator, List, Optional, Tuple
+from heapq import heappop, heappush
+from typing import Any, Callable, Generator, List, Optional
+
+from collections import deque
 
 
 class Event:
-    """One-shot event; processes wait on it by ``yield``-ing it."""
+    """One-shot event; processes wait on it by ``yield``-ing it.
 
-    __slots__ = ("sim", "triggered", "value", "_waiters")
+    ``_cb`` is the single-waiter fast path; ``_waiters`` is lazily created
+    only when a second callback subscribes before the event triggers.
+    """
+
+    __slots__ = ("sim", "triggered", "value", "_cb", "_waiters")
 
     def __init__(self, sim: "Sim"):
         self.sim = sim
         self.triggered = False
         self.value: Any = None
-        self._waiters: List[Callable[[Any], None]] = []
+        self._cb: Optional[Callable[[Any], None]] = None
+        self._waiters: Optional[List[Callable[[Any], None]]] = None
 
     def succeed(self, value: Any = None) -> "Event":
         if self.triggered:
             raise RuntimeError("event already triggered")
         self.triggered = True
         self.value = value
-        waiters, self._waiters = self._waiters, []
-        for cb in waiters:
+        cb = self._cb
+        if cb is not None:
+            self._cb = None
             cb(value)
+        waiters = self._waiters
+        if waiters is not None:
+            self._waiters = None
+            for w in waiters:
+                w(value)
         return self
 
     def add_callback(self, cb: Callable[[Any], None]) -> None:
         if self.triggered:
             cb(self.value)
+        elif self._cb is None:
+            self._cb = cb
+        elif self._waiters is None:
+            self._waiters = [cb]
         else:
             self._waiters.append(cb)
 
@@ -49,22 +79,34 @@ class Event:
 class Process(Event):
     """Drives a generator; the Process itself is an Event that fires on return."""
 
-    __slots__ = ("gen",)
+    __slots__ = ("gen", "_send", "_bound_step")
 
     def __init__(self, sim: "Sim", gen: Generator):
         super().__init__(sim)
         self.gen = gen
-        sim._immediate(self._step, None)
+        self._send = gen.send
+        # bind once: `self._step` attribute access builds a fresh bound
+        # method per yield, which shows up in the hot loop
+        self._bound_step = self._step
+        sim._immediate(self._bound_step, None)
 
     def _step(self, send_value: Any) -> None:
         try:
-            ev = self.gen.send(send_value)
+            ev = self._send(send_value)
         except StopIteration as stop:
-            self.succeed(getattr(stop, "value", None))
+            self.succeed(stop.value)
             return
-        if not isinstance(ev, Event):
+        if ev.__class__ is not Event and not isinstance(ev, Event):
             raise TypeError(f"process yielded non-event: {ev!r}")
-        ev.add_callback(self._step)
+        # inlined Event.add_callback (single-waiter fast path)
+        if ev.triggered:
+            self._bound_step(ev.value)
+        elif ev._cb is None:
+            ev._cb = self._bound_step
+        elif ev._waiters is None:
+            ev._waiters = [self._bound_step]
+        else:
+            ev._waiters.append(self._bound_step)
 
 
 class Sim:
@@ -72,26 +114,41 @@ class Sim:
 
     def __init__(self) -> None:
         self.now = 0.0
-        self._heap: List[Tuple[float, int, bool, Callable[[], None]]] = []
+        # heap entries: (at, seq, daemon, event, value) — popping an entry
+        # fires event.succeed(value); no per-entry callable is allocated
+        self._heap: List[tuple] = []
         self._seq = 0
         self._live = 0  # non-daemon entries in the heap
 
     # -- scheduling -------------------------------------------------------
-    def _push(self, at: float, fn: Callable[[], None], daemon: bool) -> None:
+    def _schedule(self, at: float, ev: Event, value: Any,
+                  daemon: bool) -> None:
         self._seq += 1
         if not daemon:
             self._live += 1
-        heapq.heappush(self._heap, (at, self._seq, daemon, fn))
+        heappush(self._heap, (at, self._seq, daemon, ev, value))
 
     def _immediate(self, fn: Callable[[Any], None], value: Any) -> None:
-        self._push(self.now, lambda: fn(value), daemon=False)
+        ev = Event(self)
+        ev._cb = fn
+        self._schedule(self.now, ev, value, False)
 
     def timeout(self, delay: float, value: Any = None,
                 daemon: bool = False) -> Event:
         if delay < 0:
             raise ValueError(f"negative delay {delay}")
-        ev = Event(self)
-        self._push(self.now + delay, lambda: ev.succeed(value), daemon)
+        # inlined Event() + _schedule(): timeout is the kernel's hottest
+        # allocation site (one per I/O, per yield, per poller tick)
+        ev = Event.__new__(Event)
+        ev.sim = self
+        ev.triggered = False
+        ev.value = None
+        ev._cb = None
+        ev._waiters = None
+        self._seq += 1
+        if not daemon:
+            self._live += 1
+        heappush(self._heap, (self.now + delay, self._seq, daemon, ev, value))
         return ev
 
     def event(self) -> Event:
@@ -101,29 +158,43 @@ class Sim:
         return Process(self, gen)
 
     # -- running ----------------------------------------------------------
-    def _pop(self) -> Callable[[], None]:
-        at, _, daemon, fn = heapq.heappop(self._heap)
-        if not daemon:
-            self._live -= 1
-        self.now = at
-        return fn
-
     def run(self, until: Optional[float] = None) -> None:
         """Run until no *non-daemon* work remains (or virtual ``until``)."""
-        while self._heap and self._live > 0:
-            at = self._heap[0][0]
+        heap = self._heap
+        while heap and self._live > 0:
+            at = heap[0][0]
             if until is not None and at > until:
                 self.now = until
                 return
-            self._pop()()
+            # drain everything ready at this timestamp in one tight loop,
+            # firing events inline (saves a method call per entry)
+            self.now = at
+            while heap and heap[0][0] == at and self._live > 0:
+                _, _, daemon, ev, value = heappop(heap)
+                if not daemon:
+                    self._live -= 1
+                if ev.triggered:
+                    raise RuntimeError("event already triggered")
+                ev.triggered = True
+                ev.value = value
+                cb = ev._cb
+                if cb is not None:
+                    ev._cb = None
+                    cb(value)
+                ws = ev._waiters
+                if ws is not None:
+                    ev._waiters = None
+                    for w in ws:
+                        w(value)
         if until is not None:
             self.now = until
 
     def run_until(self, ev: Event) -> Any:
         """Run until ``ev`` triggers (used by the synchronous KV facade)."""
+        heap = self._heap
         daemon_only = 0
         while not ev.triggered:
-            if not self._heap:
+            if not heap:
                 raise RuntimeError("deadlock: event never triggers")
             if self._live == 0:
                 daemon_only += 1
@@ -133,7 +204,24 @@ class Sim:
                         "event never triggers")
             else:
                 daemon_only = 0
-            self._pop()()
+            at, _, daemon, e, value = heappop(heap)
+            if not daemon:
+                self._live -= 1
+            self.now = at
+            # inlined Event.succeed (hot: one fire per client op yield)
+            if e.triggered:
+                raise RuntimeError("event already triggered")
+            e.triggered = True
+            e.value = value
+            cb = e._cb
+            if cb is not None:
+                e._cb = None
+                cb(value)
+            ws = e._waiters
+            if ws is not None:
+                e._waiters = None
+                for w in ws:
+                    w(value)
         return ev.value
 
 
@@ -144,7 +232,7 @@ class Semaphore:
         self.sim = sim
         self.capacity = capacity
         self.in_use = 0
-        self._queue: List[Event] = []
+        self._queue: deque = deque()
 
     def acquire(self) -> Event:
         ev = self.sim.event()
@@ -157,8 +245,7 @@ class Semaphore:
 
     def release(self) -> None:
         if self._queue:
-            ev = self._queue.pop(0)
-            ev.succeed()
+            self._queue.popleft().succeed()
         else:
             self.in_use -= 1
             if self.in_use < 0:

@@ -7,6 +7,8 @@ from repro.config import TrainConfig
 from repro.configs import get_config
 from repro.launch.train import train_loop
 
+pytestmark = pytest.mark.slow  # full training loops, 1+ min; run with -m slow
+
 
 def _tiny():
     return dataclasses.replace(

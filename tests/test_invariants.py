@@ -1,0 +1,205 @@
+"""Storage-substrate invariants under real workloads.
+
+Property-style tests that instrument the zoned devices and middleware while
+a randomized workload runs, then assert:
+
+* the zone state machine only ever takes legal steps
+  (EMPTY -> OPEN -> FULL -> reset; resets allowed from OPEN/FULL),
+* reserved WAL/cache zones never leak after ``wal_flushed``,
+* ``_ssd_level_counts`` always matches the SST registry across
+  flush / compaction / migration.
+"""
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from repro.lsm import DB, SCHEMES
+from repro.workloads import (BurstyArrivals, YCSB, run_load, run_open_loop,
+                             run_workload)
+from repro.zoned.device import ZoneState
+
+
+# ---------------------------------------------------------------------
+# zone state machine
+# ---------------------------------------------------------------------
+LEGAL = {
+    (ZoneState.EMPTY, ZoneState.OPEN),    # alloc / first append
+    (ZoneState.EMPTY, ZoneState.FULL),    # single append fills the zone
+    (ZoneState.OPEN, ZoneState.FULL),     # append fills / finish
+    (ZoneState.OPEN, ZoneState.EMPTY),    # reset (ZNS allows any state)
+    (ZoneState.FULL, ZoneState.EMPTY),    # reset after full
+}
+
+
+class TransitionRecorder:
+    """Wraps a device's mutating entry points; records state transitions."""
+
+    def __init__(self, dev):
+        self.dev = dev
+        self.transitions = []
+        self.illegal = []
+        for name in ("alloc_zone", "reset_zone", "finish_zone", "append"):
+            self._wrap(name)
+        # alloc_sst_zones in the middleware flips states directly; catch
+        # those with snapshots instead (see snapshot())
+        self._states = {z.zid: z.state for z in dev.zones}
+
+    def _wrap(self, name):
+        dev = self.dev
+        orig = getattr(dev, name)
+
+        def wrapped(*args, **kw):
+            before = {z.zid: z.state for z in dev.zones}
+            out = orig(*args, **kw)
+            for z in dev.zones:
+                b = before[z.zid]
+                if z.state != b:
+                    self.transitions.append((z.zid, b, z.state))
+                    if (b, z.state) not in LEGAL:
+                        self.illegal.append((name, z.zid, b, z.state))
+            return out
+
+        setattr(dev, name, wrapped)
+
+    def snapshot_check(self):
+        """States flipped outside the wrapped calls must still be legal."""
+        for z in self.dev.zones:
+            b = self._states[z.zid]
+            if z.state != b and (b, z.state) not in LEGAL:
+                self.illegal.append(("snapshot", z.zid, b, z.state))
+            self._states[z.zid] = z.state
+
+
+def _churn(db, n=2500, seed=0):
+    run_load(db, n_keys=n, seed=seed)
+    db.flush_all()
+    run_workload(db, YCSB["A"], n_ops=1200, n_keys=n, seed=seed + 1)
+    db.drain()
+
+
+@pytest.mark.parametrize("scheme", ["B3", "AUTO", "HHZS"])
+def test_zone_state_machine_legal_transitions(scheme):
+    db = DB(scheme, tiny_scenario(), store_values=True)
+    recs = [TransitionRecorder(db.ssd), TransitionRecorder(db.hdd)]
+    _churn(db)
+    for r in recs:
+        r.snapshot_check()
+        assert r.transitions, "workload must actually exercise zones"
+        assert not r.illegal, f"illegal zone transitions: {r.illegal[:5]}"
+
+
+def test_zone_static_invariants_after_churn(any_db):
+    db = any_db
+    _churn(db)
+    for dev in (db.ssd, db.hdd):
+        for z in dev.zones:
+            assert 0 <= z.write_ptr <= z.capacity
+            if z.state == ZoneState.EMPTY:
+                assert z.write_ptr == 0 and z.owner is None
+            if z.write_ptr == z.capacity:
+                assert z.state == ZoneState.FULL
+
+
+def test_append_to_full_zone_raises(tiny_db):
+    dev = tiny_db.ssd
+    z = dev.alloc_zone("t")
+    dev.append(z, z.capacity)
+    assert z.state == ZoneState.FULL
+    with pytest.raises(RuntimeError):
+        dev.append(z, 1)
+    with pytest.raises(RuntimeError):
+        dev.append(dev.alloc_zone("t2"), dev.zone_capacity + 1)
+
+
+# ---------------------------------------------------------------------
+# reserved WAL/cache zones
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", ["P", "HHZS"])
+def test_reserved_zones_never_leak(scheme):
+    db = DB(scheme, tiny_scenario(), store_values=True)
+    be = db.backend
+    assert be.reserve_zids, "HHZS-family schemes reserve WAL/cache zones"
+    _churn(db)
+    db.flush_all()      # kill remaining live generations, then settle
+    db.drain()
+    # everything flushed + drained: every reserved zone is either EMPTY or
+    # legitimately owned by the WAL (current zone) / cache — never orphaned
+    wal_zids = {rec["zone"].zid for rec in be._wal_records}
+    cache_zids = {z.zid for z in be.cache.zones} if be.cache else set()
+    for zid in be.reserve_zids:
+        z = db.ssd.zones[zid]
+        if z.state == ZoneState.EMPTY:
+            assert z.owner is None and z.write_ptr == 0
+        else:
+            assert z.owner in ("wal", "cache"), \
+                f"reserved zone {zid} leaked to owner {z.owner!r}"
+            if z.owner == "wal":
+                assert zid in wal_zids, f"orphaned WAL zone {zid}"
+            else:
+                assert zid in cache_zids, f"orphaned cache zone {zid}"
+    # after a full flush at most the current WAL zone stays live
+    assert be.wal_zones_in_use() <= 1
+
+
+def test_wal_flushed_reclaims_dead_zones():
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    be = db.backend
+    for k in range(1500):
+        db.put(k, b"x" * 8)
+    peak = be.wal_zones_in_use()
+    db.flush_all()
+    db.drain()
+    assert peak >= 1
+    assert be.wal_zones_in_use() <= 1
+    # reclaimed zones are EMPTY again, write pointers rewound
+    free = [db.ssd.zones[zid] for zid in be.reserve_zids
+            if db.ssd.zones[zid].state == ZoneState.EMPTY]
+    assert all(z.write_ptr == 0 for z in free)
+
+
+# ---------------------------------------------------------------------
+# SSD level-count accounting vs the SST registry
+# ---------------------------------------------------------------------
+def _assert_level_counts_match(db, when):
+    be = db.backend
+    actual = {}
+    for s in be.ssts.values():
+        if s.tier == "ssd":
+            actual[s.level] = actual.get(s.level, 0) + 1
+    for lvl in set(actual) | set(be._ssd_level_counts):
+        assert be._ssd_level_counts.get(lvl, 0) == actual.get(lvl, 0), \
+            (f"{when}: _ssd_level_counts[{lvl}]="
+             f"{be._ssd_level_counts.get(lvl, 0)} but registry has "
+             f"{actual.get(lvl, 0)}")
+
+
+@pytest.mark.parametrize("scheme", ["B3", "P+M", "HHZS"])
+def test_ssd_level_counts_match_registry(scheme):
+    """Counts stay consistent across flush, compaction and migration."""
+    db = DB(scheme, tiny_scenario(), store_values=True)
+    n = 2500
+    run_load(db, n_keys=n)
+    _assert_level_counts_match(db, "after load")
+    db.flush_all()
+    _assert_level_counts_match(db, "after flush_all")
+    run_workload(db, YCSB["A"], n_ops=1200, n_keys=n)
+    _assert_level_counts_match(db, "after workload")
+    db.drain()
+    _assert_level_counts_match(db, "after drain")
+
+
+def test_ssd_level_counts_under_open_loop_burst():
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    n = 1500
+    run_load(db, n_keys=n)
+    db.flush_all()
+    run_open_loop(db, YCSB["A"], BurstyArrivals(2.0, 50.0, on=20.0, off=40.0),
+                  duration=120.0, n_keys=n, max_concurrency=8)
+    db.drain()
+    _assert_level_counts_match(db, "after open-loop burst")
+    # registry zones all owned and resident on the right device
+    for sst in db.backend.ssts.values():
+        dev = db.backend.device_of(sst.tier)
+        for z in sst.zones:
+            assert z.owner == f"sst:{sst.sid}"
+            assert dev.zones[z.zid] is z

@@ -10,6 +10,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-device subprocess compile, ~8 min; run with -m slow
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,0 +1,171 @@
+"""Open-loop workload engine: arrival processes, latency decomposition,
+warm-up/time-limit semantics, and the declarative ScenarioMatrix."""
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from repro.lsm import DB
+from repro.workloads import (BurstyArrivals, PoissonArrivals, RampArrivals,
+                             ScenarioMatrix, WorkloadSpec, YCSB,
+                             run_load, run_open_loop, run_workload)
+
+
+# ---------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("arrival,expected", [
+    (PoissonArrivals(50.0), 50.0 * 200),
+    (BurstyArrivals(10.0, 100.0, on=20.0, off=30.0), 200 * (100.0 * 0.4 + 10.0 * 0.6)),
+    (RampArrivals(20.0, 80.0), 200 * 50.0),
+])
+def test_arrival_processes_rate_and_ordering(arrival, expected):
+    rng = np.random.default_rng(7)
+    ts = arrival.times(rng, 200.0)
+    assert np.all(np.diff(ts) >= 0), "arrival times must be sorted"
+    assert ts[0] >= 0.0 and ts[-1] < 200.0, "times within [0, duration)"
+    # counts within 6 sigma of the expected Poisson mass
+    assert abs(len(ts) - expected) < 6 * np.sqrt(expected) + 10, \
+        f"{arrival.name}: {len(ts)} arrivals, expected ~{expected:.0f}"
+
+
+def test_ramp_arrivals_actually_ramp():
+    rng = np.random.default_rng(3)
+    ts = RampArrivals(5.0, 100.0).times(rng, 400.0)
+    first, second = np.sum(ts < 200.0), np.sum(ts >= 200.0)
+    assert second > 1.5 * first, "second half must see much higher rate"
+
+
+def test_bursty_arrivals_concentrate_in_bursts():
+    rng = np.random.default_rng(4)
+    a = BurstyArrivals(2.0, 80.0, on=10.0, off=40.0)
+    ts = a.times(rng, 500.0)
+    phase = np.mod(ts, 50.0)
+    in_burst = np.sum(phase < 10.0)
+    assert in_burst > 0.75 * len(ts), "most arrivals must land in bursts"
+
+
+def test_arrivals_are_deterministic_per_seed():
+    a = PoissonArrivals(30.0)
+    t1 = a.times(np.random.default_rng(11), 100.0)
+    t2 = a.times(np.random.default_rng(11), 100.0)
+    assert np.array_equal(t1, t2)
+
+
+# ---------------------------------------------------------------------
+# open-loop runner
+# ---------------------------------------------------------------------
+def _loaded(scheme="HHZS", n=1200):
+    db = DB(scheme, tiny_scenario(), store_values=True)
+    run_load(db, n_keys=n)
+    db.flush_all()
+    return db, n
+
+
+def test_open_loop_underload_queueing_negligible():
+    db, n = _loaded()
+    # probe the service rate, then offer well below it
+    probe = run_workload(db, YCSB["C"], n_ops=300, n_keys=n)
+    res = run_open_loop(db, YCSB["C"], PoissonArrivals(0.2 * probe.throughput),
+                        duration=400.0, n_keys=n, warmup=20.0)
+    assert res.n_measured > 50
+    # underloaded: median sojourn is dominated by service, not queueing
+    assert res.queue_p["p50"] <= res.service_p["p50"]
+    assert res.latency_p["p50"] >= res.service_p["p50"]
+
+
+def test_open_loop_burst_overload_shows_queueing():
+    db, n = _loaded("B3")
+    probe = run_workload(db, YCSB["A"], n_ops=300, n_keys=n)
+    svc = probe.throughput
+    res = run_open_loop(
+        db, YCSB["A"],
+        BurstyArrivals(0.2 * svc, 6.0 * svc, on=30.0, off=60.0),
+        duration=300.0, n_keys=n, warmup=10.0, max_concurrency=8)
+    # bursts exceed the service rate: tail latency must be queueing-dominated
+    assert res.max_queue_depth > 5
+    assert res.queue_p["p99"] > res.service_p["p99"], \
+        f"queue p99 {res.queue_p['p99']} vs service {res.service_p['p99']}"
+    # all arrived ops completed (drain=True)
+    assert res.n_arrived >= res.n_measured > 0
+
+
+def test_open_loop_warmup_excluded_and_accounting_consistent():
+    db, n = _loaded()
+    res_all = run_open_loop(db, YCSB["C"], PoissonArrivals(20.0),
+                            duration=100.0, n_keys=n, warmup=50.0, seed=5)
+    # warm-up excludes roughly the first half of arrivals
+    assert res_all.n_measured < res_all.n_arrived
+    assert res_all.n_measured == pytest.approx(res_all.n_arrived / 2,
+                                               rel=0.35)
+    # sojourn >= each component at every reported percentile
+    for k in res_all.latency_p:
+        assert res_all.latency_p[k] >= res_all.queue_p[k] - 1e-9
+        assert res_all.latency_p[k] >= res_all.service_p[k] - 1e-9
+
+
+def test_open_loop_time_limited_no_drain():
+    db, n = _loaded("B3")
+    t0 = db.now
+    probe = run_workload(db, YCSB["A"], n_ops=200, n_keys=n)
+    t1 = db.now
+    res = run_open_loop(db, YCSB["A"],
+                        PoissonArrivals(3.0 * probe.throughput),
+                        duration=120.0, n_keys=n, max_concurrency=4,
+                        drain=False)
+    # hard stop at the end of the arrival window
+    assert db.now == pytest.approx(t1 + 120.0)
+    # overloaded + truncated: some arrived ops never completed
+    assert res.n_measured < res.n_arrived
+    assert res.n_measured > 0
+
+
+def test_open_loop_results_deterministic():
+    r = []
+    for _ in range(2):
+        db, n = _loaded()
+        r.append(run_open_loop(db, YCSB["A"], PoissonArrivals(10.0),
+                               duration=60.0, n_keys=n, seed=9))
+    assert r[0].n_arrived == r[1].n_arrived
+    assert r[0].latency_p == r[1].latency_p
+    assert r[0].op_counts == r[1].op_counts
+
+
+# ---------------------------------------------------------------------
+# scenario matrix
+# ---------------------------------------------------------------------
+def test_scenario_matrix_sweeps_and_emits_rows(tmp_path):
+    def db_factory(scheme, ssd_zones):
+        db = DB(scheme, tiny_scenario(ssd_zones=ssd_zones),
+                store_values=True)
+        run_load(db, n_keys=800)
+        db.flush_all()
+        db.n_keys = 800
+        return db
+
+    spec = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
+    matrix = ScenarioMatrix(
+        schemes=["B3", "HHZS"],
+        workloads=[spec],
+        arrivals=[PoissonArrivals(8.0),
+                  BurstyArrivals(2.0, 40.0, on=20.0, off=40.0)],
+        ssd_zone_budgets=[20],
+        duration=120.0, warmup=10.0,
+        db_factory=db_factory)
+    assert len(matrix.cells()) == 4
+    out = tmp_path / "scenarios.json"
+    rows = matrix.run(out=out, verbose=False)
+    assert out.exists() and len(rows) == 4
+    cells = {r["cell"] for r in rows}
+    assert len(cells) == 4, "every cell must be distinct"
+    for r in rows:
+        for key in ("scheme", "workload", "arrival", "ssd_zones",
+                    "offered_rate", "throughput", "latency_p", "queue_p",
+                    "service_p", "max_queue_depth"):
+            assert key in r, f"row missing {key}"
+        assert r["n_measured"] > 0
+        assert r["latency_p"]["p99"] >= r["latency_p"]["p50"]
+    # p99 queue-vs-service reported for both schemes (acceptance criterion)
+    for scheme in ("B3", "HHZS"):
+        srows = [r for r in rows if r["scheme"] == scheme]
+        assert srows and all("p99" in r["queue_p"] and "p99" in r["service_p"]
+                             for r in srows)

@@ -8,6 +8,8 @@ from repro.configs import get_config
 from repro.models import init_params, model as M
 from repro.serving import HHZSKVManager, PagedPool, Request, ServingEngine
 
+pytestmark = pytest.mark.slow  # serving-engine e2e decode, ~1 min; run with -m slow
+
 
 def _pools(layers=2, kv=2, d=16, hbm=4, host=16, ppz=2, ps=8):
     mk = lambda name, zones, host_: PagedPool(name, layers, zones, ppz, ps,

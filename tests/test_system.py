@@ -12,6 +12,8 @@ from repro.lsm import DB, ScenarioConfig
 from repro.workloads import (LevelSampler, WorkloadSpec, YCSB, run_load,
                              run_workload)
 
+pytestmark = pytest.mark.slow  # full load+workload per scheme, ~1 min; run with -m slow
+
 N = ScenarioConfig().paper_keys // 4      # small but same proportions
 
 
