@@ -1,6 +1,15 @@
 """Render EXPERIMENTS.md tables from results/ JSON artifacts.
 
   PYTHONPATH=src python -m benchmarks.report          # print all sections
+
+Storage sections consume the artifacts written by ``benchmarks.storage_exps``
+(``results/storage/exp*.json``, ``fig2.json``) and the open-loop scenario
+rows in ``results/storage/scenarios.json``.  The scenario row schema is
+documented on ``repro.workloads.runner.OpenLoopResult.to_json``; rows
+carrying a ``tenant`` key come from multi-tenant admission-control sweeps
+(``bench_multitenant``) and are rendered as a separate per-tenant
+tail-latency table, while the remaining rows form the single-stream
+queueing-vs-service table.
 """
 import json
 from pathlib import Path
@@ -87,19 +96,30 @@ def storage_tables() -> str:
     if sc:
         out.append("### scenario matrix (open-loop)")
         out.append(sc)
+    mt = tenant_tail_table()
+    if mt:
+        out.append("### multi-tenant admission control (per-tenant tails)")
+        out.append(mt)
     return "\n".join(out)
 
 
-def scenario_matrix_table() -> str:
-    """Open-loop ScenarioMatrix rows (results/storage/scenarios.json):
-    queueing-delay vs service-time decomposition per cell."""
+def _scenario_rows():
     p = Path("results/storage/scenarios.json")
-    if not p.exists():
-        return ""
+    return json.loads(p.read_text()) if p.exists() else []
+
+
+def scenario_matrix_table() -> str:
+    """Single-stream open-loop ScenarioMatrix rows
+    (results/storage/scenarios.json, rows without a ``tenant`` key):
+    queueing-delay vs service-time decomposition per cell."""
     rows = ["| cell | offered/s | thpt/s | p50 ms | p99 ms |"
             " p99 queue ms | p99 service ms | max depth |",
             "|---|---|---|---|---|---|---|---|"]
-    for r in json.loads(p.read_text()):
+    found = False
+    for r in _scenario_rows():
+        if "tenant" in r:
+            continue
+        found = True
         rows.append(
             f"| {r['cell']} | {r['offered_rate']:.1f} "
             f"| {r['throughput']:.1f} "
@@ -108,7 +128,36 @@ def scenario_matrix_table() -> str:
             f"| {r['queue_p']['p99']*1e3:.1f} "
             f"| {r['service_p']['p99']*1e3:.1f} "
             f"| {r['max_queue_depth']} |")
-    return "\n".join(rows)
+    return "\n".join(rows) if found else ""
+
+
+def tenant_tail_table() -> str:
+    """Per-tenant tail-latency table from the multi-tenant admission-control
+    sweep (rows of results/storage/scenarios.json carrying a ``tenant``
+    key).  A ``*`` marks protected (SLO) tenants; ``shed``/``delayed`` are
+    the admission-controller counters, so a protected tenant's p999
+    queueing delay can be read off against the policy that produced it."""
+    rows = ["| cell | tenant | policy | offered/s | admitted | shed |"
+            " delayed | p99 queue ms | p999 queue ms | p99 service ms |"
+            " p999 total ms |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    found = False
+    for r in _scenario_rows():
+        if "tenant" not in r:
+            continue
+        found = True
+        a = r["admission"]
+        star = "*" if r.get("protected") else ""
+        rows.append(
+            f"| {r['cell']} | {r['tenant']}{star} | {r['policy']} "
+            f"| {r['offered_rate']:.1f} "
+            f"| {int(a['admitted'])} | {int(a['rejected'])} "
+            f"| {int(a['delayed'])} "
+            f"| {r['queue_p']['p99']*1e3:.1f} "
+            f"| {r['queue_p']['p999']*1e3:.1f} "
+            f"| {r['service_p']['p99']*1e3:.1f} "
+            f"| {r['latency_p']['p999']*1e3:.1f} |")
+    return "\n".join(rows) if found else ""
 
 
 if __name__ == "__main__":

@@ -286,7 +286,15 @@ def bench_scenarios() -> List[str]:
         ssd_zone_budgets=[20],
         duration=1800.0, warmup=120.0,
         db_factory=db_factory)
-    data = matrix.run(out=RESULTS / "scenarios.json")
+    data = matrix.run()
+    # merge: refresh the single-stream rows, keep any multi-tenant rows
+    # (bench_multitenant applies the same convention in reverse)
+    scen = RESULTS / "scenarios.json"
+    kept = [r for r in (json.loads(scen.read_text())
+                        if scen.exists() else [])
+            if "tenant" in r]
+    scen.parent.mkdir(parents=True, exist_ok=True)
+    scen.write_text(json.dumps(data + kept, indent=1))
     rows = []
     for r in data:
         rows.append(_row(
@@ -296,6 +304,80 @@ def bench_scenarios() -> List[str]:
             f";thpt={r['throughput']:.1f}/s"
             f";p99q={r['queue_p']['p99']*1e3:.1f}ms"
             f";p99s={r['service_p']['p99']*1e3:.1f}ms"))
+    return rows
+
+
+def bench_multitenant() -> List[str]:
+    """Multi-tenant SLO experiment: a protected steady tenant shares each
+    store with a flash-crowd tenant, under admission policies none /
+    reject-at-pressure / delay-at-pressure.  Emits one row per tenant per
+    cell; rows are merged into results/storage/scenarios.json (alongside
+    the single-stream scenario rows) for benchmarks/report.py's per-tenant
+    tail-latency table.  The headline number: the protected tenant's p999
+    queueing delay with shedding on vs off under the same offered load."""
+    from repro.core.middleware import AdmissionConfig
+    from repro.workloads import (FlashCrowdArrivals, PoissonArrivals,
+                                 ScenarioMatrix, TenantSpec)
+
+    def db_factory(scheme, ssd_zones):
+        sc = ScenarioConfig(ssd_zones=ssd_zones)
+        db = DB(scheme, sc)
+        n = sc.paper_keys // (4 * KEY_DIV)
+        run_load(db, n_keys=n)
+        db.flush_all()
+        db.n_keys = n
+        return db
+
+    # closed-loop probe anchors the offered rates (see bench_scenarios)
+    probe = db_factory("B3", 20)
+    spec = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
+    pr = run_workload(probe, spec, n_ops=2000, n_keys=probe.n_keys)
+    svc = max(pr.throughput, 1e-6)
+    mix = [
+        TenantSpec("steady", spec, PoissonArrivals(0.35 * svc),
+                   protected=True),
+        TenantSpec("flash", spec,
+                   FlashCrowdArrivals(0.15 * svc, 4.0 * svc,
+                                      at=300.0, decay=180.0)),
+    ]
+    matrix = ScenarioMatrix(
+        schemes=["B3", "HHZS"], workloads=[], arrivals=[],
+        tenants=[mix],
+        policies=[AdmissionConfig(policy=p, queue_threshold=96)
+                  for p in ("none", "reject", "delay")],
+        ssd_zone_budgets=[20],
+        duration=1200.0, warmup=120.0,
+        db_factory=db_factory)
+    data = matrix.run()
+    # merge per-tenant rows into the shared scenario artifact, replacing
+    # any previous multi-tenant rows but keeping single-stream rows
+    scen = RESULTS / "scenarios.json"
+    kept = [r for r in (json.loads(scen.read_text())
+                        if scen.exists() else [])
+            if "tenant" not in r]
+    scen.write_text(json.dumps(kept + data, indent=1))
+    (RESULTS / "multitenant.json").write_text(json.dumps(data, indent=1))
+    rows = []
+    p999 = {}
+    for r in data:
+        a = r["admission"]
+        rows.append(_row(
+            f"multitenant_{r['cell']}_{r['tenant']}",
+            r["queue_p"]["p999"] * 1e6,
+            f"offered={r['offered_rate']:.1f}/s"
+            f";admitted={int(a['admitted'])}"
+            f";shed={int(a['rejected'])}"
+            f";delayed={int(a['delayed'])}"
+            f";p999q={r['queue_p']['p999']*1e3:.1f}ms"))
+        if r["tenant"] == "steady":
+            p999[(r["scheme"], r["policy"])] = r["queue_p"]["p999"]
+    for scheme in ("B3", "HHZS"):
+        base = p999.get((scheme, "none"))
+        if base:
+            rows.append(_row(
+                f"multitenant_{scheme}_slo_gain", 0.0,
+                ";".join(f"{p}={p999.get((scheme, p), 0)/base:.3f}x"
+                         for p in ("reject", "delay"))))
     return rows
 
 
@@ -309,6 +391,7 @@ ALL = {
     "exp5": bench_exp5,
     "exp6": bench_exp6,
     "scenarios": bench_scenarios,
+    "multitenant": bench_multitenant,
 }
 
 

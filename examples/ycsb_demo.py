@@ -9,11 +9,23 @@ arrivals whose burst rate exceeds the service rate.  Closed-loop clients
 can never see this regime — the open-loop runner decomposes the resulting
 tail latency into queueing delay vs service time per scheme.
 
-  PYTHONPATH=src python examples/ycsb_demo.py
+Finally a *multi-tenant* flash-crowd scenario: a protected steady tenant
+shares one store with a flash-crowd tenant, and the admission controller
+is switched from `none` to `reject` — watch the protected tenant's p999
+queueing delay collapse while the crowd is shed.
+
+  PYTHONPATH=src python examples/ycsb_demo.py           # full demo
+  PYTHONPATH=src python examples/ycsb_demo.py --quick   # CI smoke sizing
 """
+import sys
+
+from repro.core.middleware import AdmissionConfig
 from repro.lsm import DB, ScenarioConfig
-from repro.workloads import (BurstyArrivals, YCSB, run_load, run_open_loop,
-                             run_workload)
+from repro.workloads import (BurstyArrivals, FlashCrowdArrivals,
+                             PoissonArrivals, TenantSpec, YCSB, run_load,
+                             run_multi_tenant, run_open_loop, run_workload)
+
+QUICK = "--quick" in sys.argv[1:]
 
 
 def _fresh(scheme, n):
@@ -24,13 +36,15 @@ def _fresh(scheme, n):
 
 
 def main():
-    n = ScenarioConfig().paper_keys // 4          # quick demo sizing
+    # quick mode: CI smoke sizing (same code paths, reduced dataset/runs)
+    div, n_ops = (64, 800) if QUICK else (4, 4000)
+    n = ScenarioConfig().paper_keys // div
     results = {}
     for scheme in ["B3", "AUTO", "HHZS"]:
         db, load = _fresh(scheme, n)
         row = {"load": load.throughput}
         for wl in ["A", "C"]:
-            r = run_workload(db, YCSB[wl], n_ops=4000, n_keys=n)
+            r = run_workload(db, YCSB[wl], n_ops=n_ops, n_keys=n)
             row[wl] = r.throughput
         results[scheme] = row
         print(f"{scheme:5s} load={row['load']:8.1f}  "
@@ -46,12 +60,53 @@ def main():
     svc = min(results[s]["A"] for s in results)
     arrival = BurstyArrivals(base_rate=0.3 * svc, burst_rate=3.0 * svc,
                              on=60.0, off=240.0)
-    print(f"\nopen-loop burst ({arrival.name}, virtual 20 min):")
+    burst_dur = 300.0 if QUICK else 1200.0
+    print(f"\nopen-loop burst ({arrival.name}, "
+          f"virtual {burst_dur/60:.0f} min):")
     for scheme in ["B3", "HHZS"]:
         db, _ = _fresh(scheme, n)
-        res = run_open_loop(db, YCSB["A"], arrival, duration=1200.0,
+        res = run_open_loop(db, YCSB["A"], arrival, duration=burst_dur,
                             n_keys=n, warmup=60.0)
         print(res.row())
+
+    # ---- multi-tenant flash crowd + admission control ----------------
+    # a protected steady tenant and a flash-crowd tenant share one HHZS
+    # store; shedding off (none) vs on (reject-at-pressure)
+    mt_dur = 300.0 if QUICK else 900.0
+    tenants = [
+        TenantSpec("steady", YCSB["A"], PoissonArrivals(0.3 * svc),
+                   protected=True),
+        TenantSpec("crowd", YCSB["A"],
+                   FlashCrowdArrivals(0.1 * svc, 4.0 * svc,
+                                      at=mt_dur / 5, decay=mt_dur / 6)),
+    ]
+    print(f"\nmulti-tenant flash crowd (virtual {mt_dur/60:.0f} min, "
+          f"steady tenant protected):")
+    p999 = {}
+    for policy in ["none", "reject"]:
+        db, _ = _fresh("HHZS", n)
+        res = run_multi_tenant(
+            db, tenants, duration=mt_dur, n_keys=n, warmup=30.0,
+            max_concurrency=16,
+            policy=AdmissionConfig(policy=policy, queue_threshold=32))
+        steady = res.by_tenant("steady")
+        crowd = res.by_tenant("crowd")
+        p999[policy] = steady.queue_p["p999"]
+        print(f"  policy={policy:6s} steady p999 queue "
+              f"{steady.queue_p['p999']*1e3:9.1f}ms  "
+              f"(crowd shed={int(crowd.admission['rejected'])}"
+              f"/{crowd.n_arrived})")
+    if p999["reject"] > 0:
+        ratio = p999["none"] / p999["reject"]
+        if ratio >= 1.05:
+            print(f"  shedding cuts the protected tenant's p999 queueing "
+                  f"delay {ratio:.1f}x")
+        else:
+            print(f"  shedding did not improve the protected tenant's "
+                  f"p999 queueing delay here ({ratio:.2f}x)")
+    elif p999["none"] > 0:
+        print("  shedding eliminates the protected tenant's p999 "
+              "queueing delay entirely")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,9 @@ flush/compaction/migration traffic is modelled faithfully.
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Dict, List, Optional, Set, TYPE_CHECKING
+from dataclasses import dataclass
+from typing import (Callable, Dict, FrozenSet, Generator, List, Optional,
+                    Set, Tuple, TYPE_CHECKING, Union)
 
 from ..zoned.device import MiB, Zone, ZonedDevice, ZoneState
 from ..zoned.sim import Sim
@@ -270,6 +272,15 @@ class HybridZonedBackend:
     def wal_zones_in_use(self) -> int:
         return len(self._wal_records)
 
+    def wal_pressure(self) -> bool:
+        """True while at least one writer is stalled waiting for a WAL zone.
+
+        This is the overload signal the admission controller keys on: WAL
+        stalls mean the flush pipeline cannot keep up with the offered write
+        rate, so shedding (or delaying) new work is the only way to bound
+        the queueing delay of tenants that must meet an SLO."""
+        return bool(self._wal_waiters)
+
     def acquire_reserved_zone(self, kind: str) -> Optional[Zone]:
         for z in self.ssd.zones:
             if z.zid in self.reserve_zids and z.state == ZoneState.EMPTY:
@@ -388,3 +399,197 @@ class HybridZonedBackend:
         waiters, self._wal_waiters = self._wal_waiters, []
         for ev in waiters:
             ev.succeed()
+
+
+# ======================================================================
+# admission control / load shedding (multi-tenant serving)
+# ======================================================================
+ADMIT, REJECT, DELAY = "admit", "reject", "delay"
+
+ADMISSION_POLICIES = ("none", "reject", "delay", "token_bucket")
+
+
+@dataclass
+class AdmissionConfig:
+    """Configuration of the per-tenant admission controller.
+
+    policy
+        ``none``          admit everything (baseline).
+        ``reject``        shed non-protected ops while the store is under
+                          pressure (WAL stall or service backlog) — the op
+                          is dropped before it ever queues.
+        ``delay``         hold non-protected ops while under pressure and
+                          admit them once the pressure clears (classic
+                          delay-at-WAL-pressure: offered work is deferred,
+                          not lost).
+        ``token_bucket``  per-tenant token bucket: ops above a tenant's
+                          sustained ``rate`` (with ``burst`` headroom) are
+                          shed regardless of store pressure.
+    protected
+        Tenant names exempt from shedding/delaying under every policy —
+        the SLO tenants the middleware exists to protect.
+    queue_threshold
+        Service-backlog gauge threshold: when a runner registers a queue
+        gauge (see ``AdmissionController.queue_gauge``), a backlog above
+        this count also counts as pressure.
+    poll_interval
+        Virtual seconds between pressure re-checks while a delayed op is
+        held.
+    bucket_rate / bucket_burst / bucket_rates
+        Default token-bucket parameters (tokens/virtual-second, bucket
+        size) and optional per-tenant ``{name: (rate, burst)}`` overrides.
+        The default rate is infinite, i.e. tenants without an explicit
+        budget are not rate-limited.
+    """
+
+    policy: str = "none"
+    protected: FrozenSet[str] = frozenset()
+    queue_threshold: int = 128
+    poll_interval: float = 0.5
+    bucket_rate: float = float("inf")
+    bucket_burst: float = 1.0
+    bucket_rates: Optional[Dict[str, Tuple[float, float]]] = None
+
+
+class AdmissionController:
+    """Admission-control / load-shedding layer in front of the KV store.
+
+    Sits between request arrival and the store's service queue (wired
+    through ``DB.submit(gen, tenant=...)`` and the open-loop multi-tenant
+    runner).  Each arriving op is attributed to a named tenant and gets one
+    of three verdicts from :meth:`decide`:
+
+    * ``ADMIT``  — enqueue for service now,
+    * ``REJECT`` — shed (the op never executes; conserved in counters),
+    * ``DELAY``  — hold via :meth:`hold` until pressure clears, then admit.
+
+    Pressure (:meth:`under_pressure`) is WAL back-pressure from the
+    middleware (``HybridZonedBackend.wal_pressure``) OR a service backlog
+    reported by an attached ``queue_gauge`` (the open-loop runner registers
+    its queue depth).  Protected tenants are always admitted.
+
+    Per-tenant counters (``counters[name]``):
+      ``arrived``   ops that reached the controller,
+      ``admitted``  ops enqueued for service (including after a hold),
+      ``rejected``  ops shed,
+      ``delayed``   ops that entered a hold,
+      ``holding``   ops currently held (0 after a drained run),
+      ``delay_time`` total virtual seconds spent in holds.
+    Conservation: ``arrived == admitted + rejected + holding`` at all times.
+    """
+
+    def __init__(self, sim: Sim, backend: Optional[HybridZonedBackend] = None,
+                 cfg: Union[AdmissionConfig, str, None] = None):
+        if cfg is None:
+            cfg = AdmissionConfig()
+        elif isinstance(cfg, str):
+            cfg = AdmissionConfig(policy=cfg)
+        if cfg.policy not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {cfg.policy!r}; "
+                             f"one of {ADMISSION_POLICIES}")
+        self.sim = sim
+        self.backend = backend
+        self.cfg = cfg
+        # pristine config as handed in: runners rebind self.cfg (e.g. to
+        # widen `protected` for one run) but never touch base_cfg, so a
+        # fresh per-run controller can always be rebuilt from it
+        self.base_cfg = cfg
+        # service-backlog gauge, registered by the open-loop runner:
+        # () -> current queue depth
+        self.queue_gauge: Optional[Callable[[], int]] = None
+        self.counters: Dict[str, Dict[str, float]] = {}
+        self._buckets: Dict[str, List[float]] = {}   # name -> [tokens, t]
+
+    # ------------------------------------------------------------------
+    def tenant_counters(self, tenant: str) -> Dict[str, float]:
+        c = self.counters.get(tenant)
+        if c is None:
+            c = self.counters[tenant] = {
+                "arrived": 0, "admitted": 0, "rejected": 0,
+                "delayed": 0, "holding": 0, "delay_time": 0.0}
+        return c
+
+    def under_pressure(self) -> bool:
+        if self.backend is not None and self.backend.wal_pressure():
+            return True
+        g = self.queue_gauge
+        return g is not None and g() > self.cfg.queue_threshold
+
+    # ------------------------------------------------------------------
+    def decide(self, tenant: str) -> str:
+        """Admission verdict for one arriving op of ``tenant``."""
+        c = self.tenant_counters(tenant)
+        c["arrived"] += 1
+        pol = self.cfg.policy
+        if pol == "none" or tenant in self.cfg.protected:
+            c["admitted"] += 1
+            return ADMIT
+        if pol == "token_bucket":
+            if self._take_token(tenant):
+                c["admitted"] += 1
+                return ADMIT
+            c["rejected"] += 1
+            return REJECT
+        if not self.under_pressure():
+            c["admitted"] += 1
+            return ADMIT
+        if pol == "reject":
+            c["rejected"] += 1
+            return REJECT
+        c["delayed"] += 1
+        c["holding"] += 1
+        return DELAY
+
+    def hold(self, tenant: str) -> Generator:
+        """Generator: park a DELAY-ed op until pressure clears (polling
+        every ``poll_interval`` virtual seconds), then count it admitted."""
+        c = self.tenant_counters(tenant)
+        t0 = self.sim.now
+        while self.under_pressure():
+            yield self.sim.timeout(self.cfg.poll_interval)
+        c["delay_time"] += self.sim.now - t0
+        c["holding"] -= 1
+        c["admitted"] += 1
+
+    def _take_token(self, tenant: str) -> bool:
+        rates = self.cfg.bucket_rates or {}
+        rate, burst = rates.get(tenant,
+                                (self.cfg.bucket_rate, self.cfg.bucket_burst))
+        if rate == float("inf"):
+            return True
+        now = self.sim.now
+        b = self._buckets.get(tenant)
+        if b is None:
+            b = self._buckets[tenant] = [float(burst), now]
+        tokens = min(float(burst), b[0] + (now - b[1]) * rate)
+        b[1] = now
+        if tokens >= 1.0:
+            b[0] = tokens - 1.0
+            return True
+        b[0] = tokens
+        return False
+
+    # ------------------------------------------------------------------
+    def submit(self, gen: Generator, tenant: str):
+        """``DB.submit`` facade: schedule ``gen`` subject to admission.
+
+        Returns the scheduled Process, or ``None`` when the op was shed
+        (the generator is closed without running)."""
+        verdict = self.decide(tenant)
+        if verdict == REJECT:
+            gen.close()
+            return None
+        if verdict == DELAY:
+            def held():
+                yield from self.hold(tenant)
+                result = yield from gen
+                return result
+            return self.sim.process(held())
+        return self.sim.process(gen)
+
+    def admission_summary(self, tenant: str) -> Dict[str, float]:
+        """JSON-ready per-tenant admission counters (row schema field)."""
+        c = dict(self.tenant_counters(tenant))
+        c["mean_delay"] = (c["delay_time"] / c["delayed"]
+                           if c["delayed"] else 0.0)
+        return c

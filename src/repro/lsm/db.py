@@ -23,7 +23,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
-from ..core.middleware import HybridZonedBackend
+from ..core.middleware import (AdmissionConfig, AdmissionController,
+                               HybridZonedBackend)
 from ..core.placement import (AutoPlacement, BasicScheme, HHZSPlacement,
                               PlacementPolicy)
 from ..zoned.device import (MiB, ST14000_HDD, ZN540_SSD, DeviceTiming,
@@ -92,7 +93,8 @@ class DB:
 
     def __init__(self, scheme: str = "HHZS",
                  scenario: Optional[ScenarioConfig] = None,
-                 store_values: bool = False):
+                 store_values: bool = False,
+                 admission: "AdmissionConfig | str" = "none"):
         base = scheme.split("+")[0]
         if scheme not in SCHEMES:
             raise ValueError(f"unknown scheme {scheme!r}; one of {SCHEMES}")
@@ -120,6 +122,10 @@ class DB:
             basic_migration_low_levels=(3 if scheme == "B3+M" else None),
         )
         self.tree = LSMTree(self.sim, sc.lsm, self.backend)
+        # multi-tenant admission control (policy "none" admits everything);
+        # consulted by submit(..., tenant=...) and the open-loop runners
+        self.admission = AdmissionController(self.sim, self.backend,
+                                             admission)
         self.backend.start()
 
     # ---- synchronous helpers (tests / examples) -----------------------
@@ -152,12 +158,20 @@ class DB:
         """Current virtual time, seconds."""
         return self.sim.now
 
-    def submit(self, gen):
+    def submit(self, gen, tenant: Optional[str] = None):
         """Schedule an op generator without blocking (open-loop dispatch).
 
         Returns the Process, itself an Event that fires on completion —
         callers track in-flight ops instead of waiting synchronously.
+
+        With ``tenant`` the op goes through the admission-control layer
+        (``self.admission``): under policies ``reject``/``token_bucket`` the
+        op may be shed, in which case the generator is closed unexecuted
+        and ``None`` is returned; under ``delay`` it is held until store
+        pressure clears before running.
         """
+        if tenant is not None:
+            return self.admission.submit(gen, tenant)
         return self.sim.process(gen)
 
     def run_for(self, seconds: float) -> None:

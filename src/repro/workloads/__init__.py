@@ -3,8 +3,10 @@ from .ycsb import (YCSB, WorkloadSpec, WorkloadResult, Ops, OpStream,
                    mixed, zipf_probs, LevelSampler,
                    READ, UPDATE, INSERT, SCAN, RMW)
 from .runner import (ArrivalProcess, PoissonArrivals, BurstyArrivals,
-                     RampArrivals, OpenLoopResult, run_open_loop,
-                     ScenarioCell, ScenarioMatrix)
+                     RampArrivals, DiurnalArrivals, FlashCrowdArrivals,
+                     OpenLoopResult, run_open_loop,
+                     TenantSpec, MultiTenantResult, run_multi_tenant,
+                     ScenarioCell, MultiTenantCell, ScenarioMatrix)
 
 __all__ = [
     "YCSB", "WorkloadSpec", "WorkloadResult", "Ops", "OpStream",
@@ -12,5 +14,8 @@ __all__ = [
     "mixed", "zipf_probs", "LevelSampler",
     "READ", "UPDATE", "INSERT", "SCAN", "RMW",
     "ArrivalProcess", "PoissonArrivals", "BurstyArrivals", "RampArrivals",
-    "OpenLoopResult", "run_open_loop", "ScenarioCell", "ScenarioMatrix",
+    "DiurnalArrivals", "FlashCrowdArrivals",
+    "OpenLoopResult", "run_open_loop",
+    "TenantSpec", "MultiTenantResult", "run_multi_tenant",
+    "ScenarioCell", "MultiTenantCell", "ScenarioMatrix",
 ]

@@ -11,30 +11,44 @@ This module adds:
 
 * Arrival processes: ``PoissonArrivals`` (memoryless), ``BurstyArrivals``
   (on-off modulated Poisson: bursts over a base rate), ``RampArrivals``
-  (linearly ramping rate — diurnal load edges), all generating arrival
-  timestamps in virtual seconds from a seeded RNG.
+  (linearly ramping rate — a single diurnal load edge), ``DiurnalArrivals``
+  (piecewise-linear multi-ramp through a list of rate knots — a full
+  day-shaped profile), ``FlashCrowdArrivals`` (steady base rate with a
+  sudden spike that decays exponentially — news-event traffic), all
+  generating arrival timestamps in virtual seconds from a seeded RNG.
 * ``run_open_loop``: arrivals enqueue ops; a bounded server pool (modelling
   the store's request threads) services the queue.  Per-op accounting
   splits total latency into *queueing delay* (arrival -> service start)
   and *service time* (start -> completion), with a warm-up window excluded
   from statistics and a virtual-time limit on the arrival stream.
+* ``run_multi_tenant``: N named tenants (``TenantSpec``), each with its own
+  workload, arrival process, and seeded op stream, share one ``DB`` and one
+  bounded server pool.  The same queueing/service decomposition is reported
+  *per tenant*, and each arrival passes through the store's admission
+  controller (``repro.core.middleware.AdmissionController``) so shedding /
+  delaying policies can protect an SLO tenant from a misbehaving neighbour.
 * ``ScenarioMatrix``: sweeps (scheme x workload x arrival x SSD-zone
-  budget) from a declarative spec, loads a fresh store per cell, and emits
-  JSON rows consumed by ``benchmarks/report.py``.
+  budget) — or, in multi-tenant mode, (scheme x tenant-mix x admission
+  policy x SSD-zone budget) — from a declarative spec, loads a fresh store
+  per cell, and emits JSON rows consumed by ``benchmarks/report.py``.
 
 Op semantics are shared with the closed-loop runner via ``OpStream`` —
-placement/migration/caching schemes see byte-identical request streams.
+placement/migration/caching schemes see byte-identical request streams,
+and a single-tenant run under policy ``none`` is event-for-event identical
+to ``run_open_loop`` (asserted by ``tests/test_multitenant.py``).
 """
 from __future__ import annotations
 
 import json
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..core.middleware import (DELAY, REJECT, AdmissionConfig,
+                               AdmissionController)
 from .ycsb import (OP_NAMES, READ, OpStream, WorkloadSpec, YCSB, _pct,
                    collect_extras, run_load)
 
@@ -140,12 +154,124 @@ class RampArrivals(ArrivalProcess):
         return cand[keep]
 
 
+@dataclass(frozen=True)
+class DiurnalArrivals(ArrivalProcess):
+    """Piecewise-linear multi-ramp rate through ``rates`` knots spread
+    evenly over one ``period`` (default: the whole run), closing the loop
+    back to the first knot — e.g. ``rates=(low, high, mid, high, low)`` is
+    a two-peak day.  Runs longer than ``period`` repeat the profile.
+    Implemented by thinning a max-rate Poisson stream."""
+
+    rates: Tuple[float, ...]
+    period: Optional[float] = None
+
+    @property
+    def name(self) -> str:
+        knots = "->".join(f"{r:g}" for r in self.rates)
+        if self.period is not None:
+            return f"diurnal({knots},T={self.period:g})"
+        return f"diurnal({knots})"
+
+    def times(self, rng, duration):
+        rates = tuple(self.rates)
+        if not rates:
+            return np.empty(0, np.float64)
+        period = self.period if self.period is not None else duration
+        rmax = max(rates)
+        cand = self._poisson_times(rng, rmax, 0.0, duration)
+        if not len(cand):
+            return cand
+        xp = np.linspace(0.0, period, len(rates) + 1)
+        fp = np.asarray(rates + (rates[0],), np.float64)
+        rate_t = np.interp(np.mod(cand, period), xp, fp)
+        keep = rng.random(len(cand)) < rate_t / rmax
+        return cand[keep]
+
+
+@dataclass(frozen=True)
+class FlashCrowdArrivals(ArrivalProcess):
+    """Steady Poisson at ``base_rate`` until ``at``, then an instantaneous
+    spike to ``peak_rate`` that decays exponentially back toward the base
+    with time constant ``decay`` — the canonical flash-crowd / news-event
+    shape.  Expected extra arrivals beyond the base load:
+    ``(peak_rate - base_rate) * decay`` (for runs much longer than
+    ``at + decay``).  Implemented by thinning a max-rate Poisson stream."""
+
+    base_rate: float
+    peak_rate: float
+    at: float
+    decay: float
+
+    @property
+    def name(self) -> str:
+        return (f"flash({self.base_rate:g}->{self.peak_rate:g}"
+                f"@{self.at:g},tau={self.decay:g})")
+
+    def times(self, rng, duration):
+        rmax = max(self.base_rate, self.peak_rate)
+        cand = self._poisson_times(rng, rmax, 0.0, duration)
+        if not len(cand):
+            return cand
+        rate_t = np.full(len(cand), float(self.base_rate))
+        post = cand >= self.at
+        rate_t[post] += (self.peak_rate - self.base_rate) \
+            * np.exp(-(cand[post] - self.at) / max(self.decay, 1e-12))
+        keep = rng.random(len(cand)) < rate_t / rmax
+        return cand[keep]
+
+
 # ======================================================================
 # open-loop runner
 # ======================================================================
 @dataclass
 class OpenLoopResult:
-    """Result of one open-loop run, with queueing/service decomposition."""
+    """Result of one open-loop (sub-)run with queueing/service decomposition.
+
+    One instance describes either a whole single-stream run
+    (``run_open_loop``) or one tenant's slice of a multi-tenant run
+    (``run_multi_tenant``); serialized by :meth:`to_json` it is exactly one
+    row of ``results/storage/scenarios.json``.  Row schema:
+
+    ``workload``        workload (``WorkloadSpec``) name, e.g. ``"A"``.
+    ``scheme``          placement scheme (``repro.lsm.db.SCHEMES``).
+    ``arrival``         arrival-process descriptor, e.g. ``"poisson(50)"``.
+    ``n_arrived``       ops generated by the arrival process (including
+                        shed/uncompleted ones).
+    ``n_measured``      completed ops that arrived after the warm-up window
+                        (the statistics population).
+    ``duration``        virtual seconds of the arrival window.
+    ``offered_rate``    ``n_arrived / duration`` (ops/virtual-second).
+    ``throughput``      completed ops / busy span (arrival start -> last
+                        completion).
+    ``latency_p``       percentiles (p50/p90/p99/p999/p9999, virtual
+                        seconds) of total sojourn time: arrival -> done.
+    ``queue_p``         percentiles of queueing delay: arrival -> service
+                        start (the wait for a free server, plus any
+                        admission-control hold under policy ``delay``).
+    ``service_p``       percentiles of service time: start -> done (device
+                        time incl. background-job interference).
+    ``read_latency_p``  sojourn percentiles over READ ops only.
+    ``mean_latency`` / ``mean_queue`` / ``mean_service``
+                        means over the measured population; by construction
+                        ``mean_latency == mean_queue + mean_service``.
+    ``max_queue_depth`` peak number of queued ops (this tenant's ops only
+                        in multi-tenant runs; the whole queue otherwise).
+    ``op_counts``       executed ops by type (read/update/insert/scan/rmw).
+    ``extras``          device/cache/migration counters
+                        (``repro.workloads.ycsb.collect_extras``).
+
+    Multi-tenant rows additionally carry (absent on single-stream rows):
+
+    ``tenant``          tenant name from ``TenantSpec``.
+    ``policy``          admission policy the run used
+                        (``repro.core.middleware.ADMISSION_POLICIES``).
+    ``protected``       whether this tenant was exempt from shedding.
+    ``admission``       per-tenant admission counters: ``arrived``,
+                        ``admitted``, ``rejected``, ``delayed``,
+                        ``holding`` (0 after a drained run), ``delay_time``
+                        and ``mean_delay`` (virtual seconds); conservation:
+                        ``arrived == admitted + rejected + holding``.
+    """
 
     name: str                      # workload name
     scheme: str
@@ -162,17 +288,33 @@ class OpenLoopResult:
     max_queue_depth: int
     op_counts: Dict[str, int]
     extras: Dict[str, float]
+    mean_latency: float = 0.0
+    mean_queue: float = 0.0
+    mean_service: float = 0.0
+    # set only on per-tenant rows from run_multi_tenant
+    tenant: Optional[str] = None
+    policy: Optional[str] = None
+    protected: Optional[bool] = None
+    admission: Optional[Dict[str, float]] = None
 
     def row(self) -> str:
-        return (f"{self.scheme:7s} {self.name:4s} {self.arrival:28s} "
+        tag = ""
+        if self.tenant is not None:
+            star = "*" if self.protected else ""
+            tag = f"[{self.tenant}{star}/{self.policy}] "
+        shed = ""
+        if self.admission and self.admission.get("rejected"):
+            shed = f" shed={int(self.admission['rejected'])}"
+        return (f"{tag}{self.scheme:7s} {self.name:4s} {self.arrival:28s} "
                 f"offered={self.offered_rate:8.1f}/s "
                 f"thpt={self.throughput:8.1f}/s "
                 f"p99={self.latency_p.get('p99', 0)*1e3:9.2f}ms "
                 f"(queue {self.queue_p.get('p99', 0)*1e3:9.2f}ms / "
-                f"service {self.service_p.get('p99', 0)*1e3:8.2f}ms)")
+                f"service {self.service_p.get('p99', 0)*1e3:8.2f}ms)"
+                f"{shed}")
 
     def to_json(self) -> Dict:
-        return {
+        d = {
             "workload": self.name, "scheme": self.scheme,
             "arrival": self.arrival, "n_arrived": self.n_arrived,
             "n_measured": self.n_measured, "duration": self.duration,
@@ -180,9 +322,19 @@ class OpenLoopResult:
             "latency_p": self.latency_p, "queue_p": self.queue_p,
             "service_p": self.service_p,
             "read_latency_p": self.read_latency_p,
+            "mean_latency": self.mean_latency, "mean_queue": self.mean_queue,
+            "mean_service": self.mean_service,
             "max_queue_depth": self.max_queue_depth,
             "op_counts": self.op_counts, "extras": self.extras,
         }
+        if self.tenant is not None:
+            d.update(tenant=self.tenant, policy=self.policy,
+                     protected=self.protected, admission=self.admission)
+        return d
+
+
+def _mean(arr: np.ndarray) -> float:
+    return float(arr.mean()) if len(arr) else 0.0
 
 
 def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
@@ -269,10 +421,239 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
         latency_p=_pct(total[measured]), queue_p=_pct(qdel[measured]),
         service_p=_pct(serv[measured]),
         read_latency_p=_pct(total[reads]),
+        mean_latency=_mean(total[measured]), mean_queue=_mean(qdel[measured]),
+        mean_service=_mean(serv[measured]),
         max_queue_depth=state["max_depth"],
         # snapshot: with drain=False the stream keeps mutating its counts
         # if leftover queued ops execute on a later drain
         op_counts=dict(stream.counts), extras=collect_extras(db))
+
+
+# ======================================================================
+# multi-tenant open-loop serving
+# ======================================================================
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of a multi-tenant open-loop run.
+
+    ``workload`` may be a YCSB letter key ("A".."F") or a full
+    ``WorkloadSpec``; ``arrival`` is this tenant's own arrival process.
+    ``protected`` marks the tenant exempt from admission-control
+    shedding/delaying — the SLO tenant the policies exist to protect.
+    """
+
+    name: str
+    workload: Union[str, WorkloadSpec]
+    arrival: ArrivalProcess
+    protected: bool = False
+
+
+@dataclass
+class MultiTenantResult:
+    """Result of one multi-tenant run: per-tenant ``OpenLoopResult`` slices
+    (each carrying tenant/policy/admission fields) plus shared aggregates."""
+
+    scheme: str
+    policy: str
+    duration: float
+    n_arrived: int                  # all tenants
+    n_completed: int                # all tenants
+    max_queue_depth: int            # shared service queue
+    tenants: List[OpenLoopResult]
+    extras: Dict[str, float]
+
+    def by_tenant(self, name: str) -> OpenLoopResult:
+        for t in self.tenants:
+            if t.tenant == name:
+                return t
+        raise KeyError(name)
+
+    def rows(self) -> List[Dict]:
+        return [t.to_json() for t in self.tenants]
+
+    def row(self) -> str:
+        return "\n".join(t.row() for t in self.tenants)
+
+
+def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
+                     n_keys: int, *, warmup: float = 0.0,
+                     max_concurrency: int = 64, seed: int = 1,
+                     drain: bool = True,
+                     policy: Union[AdmissionConfig, str, None] = None
+                     ) -> MultiTenantResult:
+    """N tenants with independent arrival processes share one store.
+
+    Each tenant gets its own seeded ``OpStream`` (distinct key-popularity
+    scramble and op mix) and its own arrival timestamps; the merged arrival
+    sequence feeds one bounded pool of ``max_concurrency`` servers, so
+    tenants contend for service exactly as co-located workloads contend for
+    a store's request threads.  Every arrival passes through
+    ``db.admission`` (``AdmissionController``): shed ops count in the
+    tenant's ``admission`` row but never execute; delayed ops are held
+    until store pressure clears, the hold time showing up as queueing
+    delay.  ``policy`` (a policy name or full ``AdmissionConfig``)
+    reconfigures ``db.admission`` for this run; tenants flagged
+    ``protected`` are added to the controller's protected set.
+
+    Accounting mirrors ``run_open_loop`` per tenant (queueing vs service
+    decomposition, warm-up exclusion, ``drain`` semantics); with one
+    tenant and policy ``none`` the run is event-for-event identical to
+    ``run_open_loop``.
+    """
+    sim = db.sim
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+    # fresh controller per run: counters, per-run protected-set widening
+    # and the queue gauge must not leak into later runs on the same DB
+    # (policy None keeps the DB's configured policy via its pristine cfg)
+    orig_base = db.admission.base_cfg
+    db.admission = AdmissionController(
+        sim, db.backend, policy if policy is not None else orig_base)
+    # an explicit per-run policy is an override, never the new DB default:
+    # the next policy=None run must still see the constructor's config
+    db.admission.base_cfg = orig_base
+    ctrl = db.admission
+    prot = frozenset(t.name for t in tenants if t.protected)
+    if prot:
+        # rebind (never mutate) the config: callers may share one
+        # AdmissionConfig across runs/cells with different tenant mixes
+        ctrl.cfg = replace(ctrl.cfg,
+                           protected=frozenset(ctrl.cfg.protected) | prot)
+
+    specs = [YCSB[t.workload] if isinstance(t.workload, str) else t.workload
+             for t in tenants]
+    # per-tenant seeds: tenant 0 matches run_open_loop's (seed + 2 arrival
+    # rng, seed op stream) so the single-tenant differential holds; the
+    # 9973 stride keeps tenants' streams decorrelated
+    rels, streams = [], []
+    for ti, t in enumerate(tenants):
+        rng = np.random.default_rng(seed + 2 + 9973 * ti)
+        rels.append(t.arrival.times(rng, duration))
+        streams.append(OpStream(db, specs[ti], n_ops=len(rels[ti]),
+                                n_keys=n_keys, seed=seed + 9973 * ti))
+    m_at = (np.concatenate(rels) if rels else np.empty(0, np.float64))
+    m_ti = np.concatenate([np.full(len(r), ti, np.int64)
+                           for ti, r in enumerate(rels)]) \
+        if rels else np.empty(0, np.int64)
+    m_i = np.concatenate([np.arange(len(r), dtype=np.int64) for r in rels]) \
+        if rels else np.empty(0, np.int64)
+    order = np.argsort(m_at, kind="stable")   # ties: tenant order
+    m_at, m_ti, m_i = m_at[order], m_ti[order], m_i[order]
+    m = len(m_at)
+
+    t0 = sim.now
+    arrive = [np.full(len(r), np.nan) for r in rels]
+    start = [np.full(len(r), np.nan) for r in rels]
+    done = [np.full(len(r), np.nan) for r in rels]
+    queue: deque = deque()
+    idle: List = []                       # events of parked servers
+    depth = [0] * len(tenants)            # per-tenant ops in queue
+    tmax_depth = [0] * len(tenants)
+    state = {"closed": False, "max_depth": 0, "dispatched": False,
+             "holding": 0}
+    ctrl.queue_gauge = lambda: len(queue)
+
+    def _enqueue(ti: int, i: int) -> None:
+        queue.append((ti, i))
+        depth[ti] += 1
+        if depth[ti] > tmax_depth[ti]:
+            tmax_depth[ti] = depth[ti]
+        if len(queue) > state["max_depth"]:
+            state["max_depth"] = len(queue)
+        if idle:
+            idle.pop().succeed()
+
+    def _maybe_close() -> None:
+        # servers may only exit once arrivals AND held ops are exhausted
+        if state["dispatched"] and state["holding"] == 0 \
+                and not state["closed"]:
+            state["closed"] = True
+            while idle:
+                idle.pop().succeed()
+
+    def held(ti: int, i: int):
+        yield from ctrl.hold(names[ti])
+        state["holding"] -= 1
+        _enqueue(ti, i)
+        _maybe_close()
+
+    def dispatcher():
+        for j in range(m):
+            at = t0 + float(m_at[j])
+            if at > sim.now:
+                yield sim.timeout(at - sim.now)
+            ti, i = int(m_ti[j]), int(m_i[j])
+            arrive[ti][i] = sim.now
+            verdict = ctrl.decide(names[ti])
+            if verdict == REJECT:
+                continue
+            if verdict == DELAY:
+                state["holding"] += 1
+                sim.process(held(ti, i))
+                continue
+            _enqueue(ti, i)
+        state["dispatched"] = True
+        _maybe_close()
+
+    def server():
+        while True:
+            while not queue:
+                if state["closed"]:
+                    return
+                ev = sim.event()
+                idle.append(ev)
+                yield ev
+            ti, i = queue.popleft()
+            depth[ti] -= 1
+            start[ti][i] = sim.now
+            yield from streams[ti].execute(i)
+            done[ti][i] = sim.now
+
+    procs = [db.submit(server()) for _ in range(max_concurrency)]
+    procs.append(db.submit(dispatcher()))
+    if drain:
+        for p in procs:
+            sim.run_until(p)
+    else:
+        # hard time limit (see run_open_loop): shed/held/queued ops that
+        # did not complete are excluded from statistics below
+        db.run_for(t0 + duration - sim.now)
+    busy_span = max(sim.now - t0, 1e-12)
+    ctrl.queue_gauge = None   # this run's queue is dead; don't let later
+    # DB.submit calls read pressure off it
+
+    extras = collect_extras(db)
+    results: List[OpenLoopResult] = []
+    for ti, t in enumerate(tenants):
+        arr, st, dn = arrive[ti], start[ti], done[ti]
+        completed = ~np.isnan(dn)
+        measured = completed & (arr - t0 >= warmup)
+        total = dn - arr
+        qdel = st - arr
+        serv = dn - st
+        reads = (streams[ti].ops.codes == READ) & measured
+        results.append(OpenLoopResult(
+            name=specs[ti].name, scheme=db.scheme, arrival=t.arrival.name,
+            n_arrived=len(arr), n_measured=int(measured.sum()),
+            duration=duration,
+            offered_rate=len(arr) / max(duration, 1e-12),
+            throughput=float(completed.sum()) / busy_span,
+            latency_p=_pct(total[measured]), queue_p=_pct(qdel[measured]),
+            service_p=_pct(serv[measured]),
+            read_latency_p=_pct(total[reads]),
+            mean_latency=_mean(total[measured]),
+            mean_queue=_mean(qdel[measured]),
+            mean_service=_mean(serv[measured]),
+            max_queue_depth=tmax_depth[ti],
+            op_counts=dict(streams[ti].counts), extras=extras,
+            tenant=t.name, policy=ctrl.cfg.policy, protected=t.protected,
+            admission=ctrl.admission_summary(t.name)))
+    return MultiTenantResult(
+        scheme=db.scheme, policy=ctrl.cfg.policy, duration=duration,
+        n_arrived=m,
+        n_completed=sum(int((~np.isnan(d)).sum()) for d in done),
+        max_queue_depth=state["max_depth"], tenants=results, extras=extras)
 
 
 # ======================================================================
@@ -293,15 +674,48 @@ class ScenarioCell:
                 f"{self.arrival.name}/z{self.ssd_zones}")
 
 
+@dataclass(frozen=True)
+class MultiTenantCell:
+    """One fully-resolved multi-tenant cell: a tenant mix under one
+    admission policy on one scheme/SSD budget."""
+
+    scheme: str
+    tenants: Tuple[TenantSpec, ...]
+    policy: Union[str, AdmissionConfig]
+    ssd_zones: int
+
+    @property
+    def policy_name(self) -> str:
+        return (self.policy if isinstance(self.policy, str)
+                else self.policy.policy)
+
+    @property
+    def name(self) -> str:
+        mix = "+".join(t.name for t in self.tenants)
+        return (f"{self.scheme}/mt[{mix}]/{self.policy_name}"
+                f"/z{self.ssd_zones}")
+
+
 @dataclass
 class ScenarioMatrix:
-    """Declarative sweep of (scheme x workload x arrival x SSD budget).
+    """Declarative sweep of (scheme x workload x arrival x SSD budget) —
+    or, when ``tenants`` is set, (scheme x tenant-mix x admission policy x
+    SSD budget).
 
     ``workloads`` entries may be YCSB letter keys ("A".."F") or full
     ``WorkloadSpec``s.  Each cell gets a freshly loaded store (same
     methodology as benchmarks/storage_exps.py: load, drain WAL, run while
     the compaction backlog is live), then an open-loop run.  Rows land in
-    a JSON artifact consumed by ``benchmarks/report.py``.
+    a JSON artifact (``results/storage/scenarios.json``) consumed by
+    ``benchmarks/report.py``; the row schema is documented on
+    :class:`OpenLoopResult` (``run`` adds ``cell`` — the cell name — and
+    ``ssd_zones`` to every row).
+
+    Multi-tenant mode: ``tenants`` is a list of tenant *mixes* (each a
+    sequence of ``TenantSpec``); ``workloads``/``arrivals`` are ignored and
+    every cell runs ``run_multi_tenant`` under each entry of ``policies``
+    (policy names or ``AdmissionConfig``s), emitting one row *per tenant*
+    per cell.
     """
 
     schemes: Sequence[str]
@@ -314,12 +728,20 @@ class ScenarioMatrix:
     key_div: int = 1                   # dataset divisor (quick sweeps)
     seed: int = 1
     db_factory: Optional[object] = None   # (scheme, ssd_zones) -> loaded db
+    tenants: Sequence[Sequence[TenantSpec]] = ()
+    policies: Sequence[Union[str, AdmissionConfig]] = ("none",)
     results: List[OpenLoopResult] = field(default_factory=list)
 
     def _workload_spec(self, w) -> WorkloadSpec:
         return YCSB[w] if isinstance(w, str) else w
 
-    def cells(self) -> List[ScenarioCell]:
+    def cells(self) -> List[Union[ScenarioCell, MultiTenantCell]]:
+        if self.tenants:
+            return [MultiTenantCell(s, tuple(mix), pol, z)
+                    for s in self.schemes
+                    for mix in self.tenants
+                    for pol in self.policies
+                    for z in self.ssd_zone_budgets]
         return [ScenarioCell(s, self._workload_spec(w), a, z)
                 for s in self.schemes
                 for w in self.workloads
@@ -343,19 +765,28 @@ class ScenarioMatrix:
         rows: List[Dict] = []
         for cell in self.cells():
             db = self._fresh_db(cell.scheme, cell.ssd_zones)
-            res = run_open_loop(
-                db, cell.workload, cell.arrival, self.duration,
-                n_keys=getattr(db, "n_keys", db.scenario.paper_keys
-                               // self.key_div),
-                warmup=self.warmup, max_concurrency=self.max_concurrency,
-                seed=self.seed)
-            self.results.append(res)
-            row = res.to_json()
-            row["ssd_zones"] = cell.ssd_zones
-            row["cell"] = cell.name
-            rows.append(row)
-            if verbose:
-                print(res.row(), flush=True)
+            n_keys = getattr(db, "n_keys",
+                             db.scenario.paper_keys // self.key_div)
+            if isinstance(cell, MultiTenantCell):
+                res = run_multi_tenant(
+                    db, list(cell.tenants), self.duration, n_keys=n_keys,
+                    warmup=self.warmup,
+                    max_concurrency=self.max_concurrency,
+                    seed=self.seed, policy=cell.policy)
+                per_cell = res.tenants
+            else:
+                per_cell = [run_open_loop(
+                    db, cell.workload, cell.arrival, self.duration,
+                    n_keys=n_keys, warmup=self.warmup,
+                    max_concurrency=self.max_concurrency, seed=self.seed)]
+            for r in per_cell:
+                self.results.append(r)
+                row = r.to_json()
+                row["ssd_zones"] = cell.ssd_zones
+                row["cell"] = cell.name
+                rows.append(row)
+                if verbose:
+                    print(r.row(), flush=True)
         if out is not None:
             out = Path(out)
             out.parent.mkdir(parents=True, exist_ok=True)

@@ -1,0 +1,293 @@
+"""Multi-tenant open-loop serving + admission control.
+
+Covers the accounting invariants the per-tenant rows rely on:
+per-tenant op counts sum to the run total, queueing + service recompose
+the end-to-end latency, admission counters are conserved under every
+policy, and — the differential anchor — one tenant under policy ``none``
+reproduces the single-stream ``run_open_loop`` results exactly.
+"""
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from repro.core.middleware import AdmissionConfig
+from repro.lsm import DB
+from repro.workloads import (FlashCrowdArrivals, PoissonArrivals,
+                             ScenarioMatrix, TenantSpec, YCSB,
+                             run_load, run_multi_tenant, run_open_loop)
+
+
+def _loaded(scheme="HHZS", n=1200, **db_kw):
+    db = DB(scheme, tiny_scenario(), store_values=True, **db_kw)
+    run_load(db, n_keys=n)
+    db.flush_all()
+    return db, n
+
+
+def _two_tenants(steady_rate=3.0, peak=60.0):
+    return [
+        TenantSpec("steady", YCSB["A"], PoissonArrivals(steady_rate),
+                   protected=True),
+        TenantSpec("crowd", YCSB["A"],
+                   FlashCrowdArrivals(1.0, peak, at=60.0, decay=60.0)),
+    ]
+
+
+# ---------------------------------------------------------------------
+# differential: multi-tenant engine vs PR 1's single-stream engine
+# ---------------------------------------------------------------------
+def test_single_tenant_none_reproduces_open_loop():
+    db1, n = _loaded()
+    ref = run_open_loop(db1, YCSB["A"], PoissonArrivals(10.0),
+                        duration=60.0, n_keys=n, warmup=10.0, seed=9)
+    db2, _ = _loaded()
+    mt = run_multi_tenant(db2, [TenantSpec("only", YCSB["A"],
+                                           PoissonArrivals(10.0))],
+                          duration=60.0, n_keys=n, warmup=10.0, seed=9)
+    t = mt.tenants[0]
+    # event-for-event identical: every statistic matches exactly
+    assert t.n_arrived == ref.n_arrived
+    assert t.n_measured == ref.n_measured
+    assert t.latency_p == ref.latency_p
+    assert t.queue_p == ref.queue_p
+    assert t.service_p == ref.service_p
+    assert t.read_latency_p == ref.read_latency_p
+    assert t.op_counts == ref.op_counts
+    assert t.max_queue_depth == ref.max_queue_depth
+    assert t.throughput == ref.throughput
+    assert mt.n_arrived == ref.n_arrived
+    # the tenant row is annotated; the single-stream row is not
+    assert t.tenant == "only" and t.policy == "none"
+    assert ref.tenant is None
+
+
+# ---------------------------------------------------------------------
+# per-tenant accounting
+# ---------------------------------------------------------------------
+def test_per_tenant_counts_sum_to_total():
+    db, n = _loaded()
+    res = run_multi_tenant(db, _two_tenants(peak=20.0), duration=200.0,
+                           n_keys=n, warmup=20.0)
+    assert res.n_arrived == sum(t.n_arrived for t in res.tenants)
+    assert res.n_completed == sum(
+        sum(t.op_counts.values()) for t in res.tenants)
+    # policy none + drain: everything arrived gets executed
+    assert res.n_completed == res.n_arrived
+    assert sum(t.n_measured for t in res.tenants) <= res.n_completed
+
+
+def test_per_tenant_latency_decomposition():
+    db, n = _loaded()
+    res = run_multi_tenant(db, _two_tenants(peak=30.0), duration=200.0,
+                           n_keys=n, warmup=20.0, max_concurrency=8)
+    for t in res.tenants:
+        assert t.n_measured > 0
+        # queueing + service recompose the end-to-end sojourn
+        assert t.mean_latency == pytest.approx(
+            t.mean_queue + t.mean_service, rel=1e-9)
+        for k in t.latency_p:
+            assert t.latency_p[k] >= t.queue_p[k] - 1e-9
+            assert t.latency_p[k] >= t.service_p[k] - 1e-9
+
+
+def test_results_deterministic_across_runs():
+    rows = []
+    for _ in range(2):
+        db, n = _loaded("B3")
+        res = run_multi_tenant(db, _two_tenants(), duration=150.0,
+                               n_keys=n, warmup=10.0, max_concurrency=8,
+                               policy=AdmissionConfig(policy="reject",
+                                                      queue_threshold=16))
+        rows.append([(t.tenant, t.n_arrived, t.latency_p, t.admission)
+                     for t in res.tenants])
+    assert rows[0] == rows[1]
+
+
+# ---------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["none", "reject", "delay"])
+def test_admission_counters_conserved(policy):
+    db, n = _loaded("B3")
+    cfg = AdmissionConfig(policy=policy, queue_threshold=16)
+    res = run_multi_tenant(db, _two_tenants(), duration=250.0, n_keys=n,
+                           warmup=20.0, max_concurrency=8, policy=cfg)
+    for t in res.tenants:
+        a = t.admission
+        assert a["arrived"] == t.n_arrived
+        assert a["arrived"] == a["admitted"] + a["rejected"] + a["holding"]
+        assert a["holding"] == 0, "drained run must resolve every hold"
+        assert a["delayed"] <= a["admitted"]
+        # executed ops == admitted ops (shed ops never run)
+        assert sum(t.op_counts.values()) == a["admitted"]
+        if t.protected:
+            assert a["rejected"] == 0 and a["delayed"] == 0
+    crowd = res.by_tenant("crowd").admission
+    if policy == "reject":
+        assert crowd["rejected"] > 0
+    if policy == "delay":
+        assert crowd["rejected"] == 0
+        assert crowd["delayed"] > 0 and crowd["delay_time"] > 0
+
+
+def test_shedding_protects_p999_queueing_delay():
+    """Acceptance criterion: with shedding on, the protected tenant's p999
+    queueing delay is strictly lower than under policy `none` at the same
+    offered load."""
+    p999 = {}
+    for policy in ["none", "reject"]:
+        db, n = _loaded("B3")
+        cfg = AdmissionConfig(policy=policy, queue_threshold=16)
+        res = run_multi_tenant(db, _two_tenants(), duration=300.0,
+                               n_keys=n, warmup=30.0, max_concurrency=8,
+                               policy=cfg)
+        p999[policy] = res.by_tenant("steady").queue_p["p999"]
+    assert p999["reject"] < p999["none"], p999
+
+
+def test_token_bucket_limits_tenant_rate():
+    db, n = _loaded()
+    cfg = AdmissionConfig(policy="token_bucket",
+                          bucket_rates={"crowd": (2.0, 5.0)})
+    res = run_multi_tenant(db, _two_tenants(peak=40.0), duration=200.0,
+                           n_keys=n, warmup=20.0, max_concurrency=8,
+                           policy=cfg)
+    crowd = res.by_tenant("crowd").admission
+    steady = res.by_tenant("steady").admission
+    # sustained rate 2/s + burst 5 over 200s
+    assert crowd["admitted"] <= 2.0 * 200.0 + 5.0
+    assert crowd["rejected"] > 0
+    # no budget configured for steady: unlimited
+    assert steady["rejected"] == 0
+
+
+def test_db_submit_routes_through_admission():
+    db = DB("HHZS", tiny_scenario(), store_values=True,
+            admission=AdmissionConfig(policy="token_bucket",
+                                      bucket_rates={"t": (0.001, 1.0)}))
+
+    def op():
+        yield db.sim.timeout(0.01)
+
+    first = db.submit(op(), tenant="t")
+    second = db.submit(op(), tenant="t")   # bucket empty: shed
+    assert first is not None and second is None
+    db.drain()
+    c = db.admission.tenant_counters("t")
+    assert c["arrived"] == 2 and c["admitted"] == 1 and c["rejected"] == 1
+    # untagged submissions bypass admission entirely
+    assert db.submit(op()) is not None
+    db.drain()
+    assert db.admission.tenant_counters("t")["arrived"] == 2
+
+
+def test_shared_admission_config_not_mutated_across_runs():
+    """A caller may reuse one AdmissionConfig across runs/cells with
+    different tenant mixes: protected names from one run must not leak
+    into the config (or the next run's controller)."""
+    cfg = AdmissionConfig(policy="reject", queue_threshold=16)
+    db, n = _loaded("B3")
+    run_multi_tenant(db, _two_tenants(), duration=50.0, n_keys=n,
+                     max_concurrency=8, policy=cfg)
+    assert cfg.protected == frozenset()
+    # a second mix where "steady" is NOT protected must actually shed it
+    db2, _ = _loaded("B3")
+    mix = [TenantSpec("steady", YCSB["A"],
+                      FlashCrowdArrivals(1.0, 60.0, at=30.0, decay=60.0))]
+    res = run_multi_tenant(db2, mix, duration=200.0, n_keys=n,
+                           max_concurrency=8, policy=cfg)
+    assert "steady" not in db2.admission.cfg.protected
+    assert res.by_tenant("steady").admission["rejected"] > 0
+
+
+def test_back_to_back_runs_on_same_db_get_fresh_admission_state():
+    """policy=None keeps the DB's configured policy but must not carry the
+    previous run's counters, protected-set widening, or queue gauge."""
+    db, n = _loaded("B3", admission=AdmissionConfig(policy="reject",
+                                                    queue_threshold=16))
+    mix1 = [TenantSpec("x", YCSB["A"], PoissonArrivals(2.0),
+                       protected=True)]
+    run_multi_tenant(db, mix1, duration=50.0, n_keys=n, max_concurrency=8)
+    # second run on the same DB: same tenant name, no longer protected
+    mix2 = [TenantSpec("x", YCSB["A"],
+                       FlashCrowdArrivals(1.0, 60.0, at=10.0, decay=60.0))]
+    res = run_multi_tenant(db, mix2, duration=200.0, n_keys=n,
+                           max_concurrency=8)
+    t = res.by_tenant("x")
+    assert t.admission["arrived"] == t.n_arrived
+    assert "x" not in db.admission.cfg.protected
+    assert t.admission["rejected"] > 0
+    # the run's queue gauge must not outlive the run
+    assert db.admission.queue_gauge is None
+
+
+def test_per_run_policy_override_does_not_replace_db_default():
+    db, n = _loaded("B3", admission=AdmissionConfig(policy="delay",
+                                                    queue_threshold=16))
+    mix = [TenantSpec("x", YCSB["A"], PoissonArrivals(2.0))]
+    run_multi_tenant(db, mix, duration=30.0, n_keys=n, max_concurrency=8,
+                     policy="none")
+    assert db.admission.cfg.policy == "none"     # override active this run
+    # a later policy=None run must rebuild from the constructor's config
+    run_multi_tenant(db, mix, duration=30.0, n_keys=n, max_concurrency=8)
+    assert db.admission.cfg.policy == "delay"
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        DB("HHZS", tiny_scenario(), admission="drop-everything")
+    with pytest.raises(ValueError):
+        db, n = _loaded()
+        run_multi_tenant(db, _two_tenants(), duration=10.0, n_keys=n,
+                         policy="bogus")
+
+
+def test_duplicate_tenant_names_rejected():
+    db, n = _loaded()
+    tenants = [TenantSpec("t", YCSB["A"], PoissonArrivals(1.0)),
+               TenantSpec("t", YCSB["C"], PoissonArrivals(1.0))]
+    with pytest.raises(ValueError):
+        run_multi_tenant(db, tenants, duration=10.0, n_keys=n)
+
+
+# ---------------------------------------------------------------------
+# scenario matrix in multi-tenant mode
+# ---------------------------------------------------------------------
+def test_scenario_matrix_tenant_policy_sweep(tmp_path):
+    def db_factory(scheme, ssd_zones):
+        db = DB(scheme, tiny_scenario(ssd_zones=ssd_zones),
+                store_values=True)
+        run_load(db, n_keys=800)
+        db.flush_all()
+        db.n_keys = 800
+        return db
+
+    mix = _two_tenants(steady_rate=2.0, peak=30.0)
+    matrix = ScenarioMatrix(
+        schemes=["B3"], workloads=[], arrivals=[],
+        tenants=[mix],
+        policies=["none", AdmissionConfig(policy="reject",
+                                          queue_threshold=16)],
+        ssd_zone_budgets=[20],
+        duration=150.0, warmup=10.0, max_concurrency=8,
+        db_factory=db_factory)
+    cells = matrix.cells()
+    assert len(cells) == 2
+    assert len({c.name for c in cells}) == 2
+    out = tmp_path / "scenarios.json"
+    rows = matrix.run(out=out, verbose=False)
+    assert out.exists()
+    # one row per tenant per cell
+    assert len(rows) == 4
+    for r in rows:
+        for key in ("cell", "ssd_zones", "tenant", "policy", "protected",
+                    "admission", "queue_p", "service_p", "latency_p",
+                    "op_counts"):
+            assert key in r, f"tenant row missing {key}"
+        a = r["admission"]
+        assert a["arrived"] == a["admitted"] + a["rejected"] + a["holding"]
+    by_cell = {}
+    for r in rows:
+        by_cell.setdefault(r["cell"], []).append(r["tenant"])
+    assert all(sorted(t) == ["crowd", "steady"]
+               for t in by_cell.values())

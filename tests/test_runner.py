@@ -5,9 +5,10 @@ import pytest
 
 from conftest import tiny_scenario
 from repro.lsm import DB
-from repro.workloads import (BurstyArrivals, PoissonArrivals, RampArrivals,
-                             ScenarioMatrix, WorkloadSpec, YCSB,
-                             run_load, run_open_loop, run_workload)
+from repro.workloads import (BurstyArrivals, DiurnalArrivals,
+                             FlashCrowdArrivals, PoissonArrivals,
+                             RampArrivals, ScenarioMatrix, WorkloadSpec,
+                             YCSB, run_load, run_open_loop, run_workload)
 
 
 # ---------------------------------------------------------------------
@@ -17,6 +18,11 @@ from repro.workloads import (BurstyArrivals, PoissonArrivals, RampArrivals,
     (PoissonArrivals(50.0), 50.0 * 200),
     (BurstyArrivals(10.0, 100.0, on=20.0, off=30.0), 200 * (100.0 * 0.4 + 10.0 * 0.6)),
     (RampArrivals(20.0, 80.0), 200 * 50.0),
+    # piecewise-linear through knots incl. wrap: mean of segment trapezoids
+    (DiurnalArrivals((20.0, 80.0, 40.0)), 200 * (50.0 + 60.0 + 30.0) / 3),
+    # base load + spike mass (peak-base)*tau*(1-exp(-(T-at)/tau))
+    (FlashCrowdArrivals(5.0, 100.0, at=50.0, decay=30.0),
+     5.0 * 200 + 95.0 * 30.0 * (1 - np.exp(-150.0 / 30.0))),
 ])
 def test_arrival_processes_rate_and_ordering(arrival, expected):
     rng = np.random.default_rng(7)
@@ -49,6 +55,37 @@ def test_arrivals_are_deterministic_per_seed():
     t1 = a.times(np.random.default_rng(11), 100.0)
     t2 = a.times(np.random.default_rng(11), 100.0)
     assert np.array_equal(t1, t2)
+
+
+def test_flash_crowd_spikes_then_decays():
+    rng = np.random.default_rng(5)
+    a = FlashCrowdArrivals(2.0, 80.0, at=100.0, decay=40.0)
+    ts = a.times(rng, 400.0)
+    pre = np.sum(ts < 100.0) / 100.0              # ops/s before the event
+    spike = np.sum((ts >= 100.0) & (ts < 140.0)) / 40.0
+    late = np.sum(ts >= 300.0) / 100.0            # long after: back to base
+    assert spike > 10 * pre, "spike must dwarf the base rate"
+    assert late < 3 * pre, "rate must decay back toward base"
+
+
+def test_diurnal_arrivals_follow_the_profile():
+    rng = np.random.default_rng(6)
+    a = DiurnalArrivals((5.0, 100.0, 5.0), period=300.0)
+    ts = a.times(rng, 300.0)
+    # knots at t=0,100,200,300: the middle third straddles the peak knot
+    lo = np.sum(ts < 50.0)
+    hi = np.sum((ts >= 75.0) & (ts < 125.0))
+    assert hi > 2 * lo, "arrivals must concentrate around the peak knot"
+
+
+def test_diurnal_profile_repeats_across_periods():
+    rng = np.random.default_rng(12)
+    a = DiurnalArrivals((5.0, 60.0), period=100.0)
+    ts = a.times(rng, 400.0)
+    per_period = [np.sum((ts >= p * 100.0) & (ts < (p + 1) * 100.0))
+                  for p in range(4)]
+    mean = np.mean(per_period)
+    assert all(abs(c - mean) < 6 * np.sqrt(mean) + 10 for c in per_period)
 
 
 # ---------------------------------------------------------------------
