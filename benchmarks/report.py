@@ -100,6 +100,10 @@ def storage_tables() -> str:
     if mt:
         out.append("### multi-tenant admission control (per-tenant tails)")
         out.append(mt)
+    fr = fault_recovery_table()
+    if fr:
+        out.append("### crash/recovery + fault injection")
+        out.append(fr)
     return "\n".join(out)
 
 
@@ -117,7 +121,7 @@ def scenario_matrix_table() -> str:
             "|---|---|---|---|---|---|---|---|"]
     found = False
     for r in _scenario_rows():
-        if "tenant" in r:
+        if "tenant" in r or "fault" in r:
             continue
         found = True
         rows.append(
@@ -157,6 +161,39 @@ def tenant_tail_table() -> str:
             f"| {r['queue_p']['p999']*1e3:.1f} "
             f"| {r['service_p']['p99']*1e3:.1f} "
             f"| {r['latency_p']['p999']*1e3:.1f} |")
+    return "\n".join(rows) if found else ""
+
+
+def fault_recovery_table() -> str:
+    """Crash/recovery + fault-injection table (rows of
+    results/storage/scenarios.json carrying a ``fault`` key, written by
+    ``bench_faults``).  ``avail`` is completed/offered ops; ``stall p99``
+    is the tail over ops that arrived inside a stall window; the crash
+    columns are the recovery accounting (downtime = crash to serving
+    again, including WAL replay I/O; replayed = logical WAL records
+    re-inserted; lost = in-flight ops killed + arrivals refused during
+    the outage)."""
+    rows = ["| cell | fault | offered/s | avail | p99 ms | stall p99 ms |"
+            " downtime s | replayed | lost |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    found = False
+    for r in _scenario_rows():
+        if "fault" not in r:
+            continue
+        found = True
+        stall = r.get("stall_p") or {}
+        crash = r.get("crash") or {}
+        lost = (int(crash.get("lost_in_flight", 0))
+                + int(crash.get("refused", 0))) if crash else 0
+        rows.append(
+            f"| {r['cell']} | {r['fault']} "
+            f"| {r['offered_rate']:.1f} "
+            f"| {r['availability']:.4f} "
+            f"| {r['latency_p']['p99']*1e3:.1f} "
+            f"| {stall.get('p99', 0)*1e3:.1f} "
+            f"| {crash.get('downtime', 0):.2f} "
+            f"| {int(crash.get('replayed_records', 0))} "
+            f"| {lost} |")
     return "\n".join(rows) if found else ""
 
 

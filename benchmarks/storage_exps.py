@@ -255,6 +255,23 @@ def bench_exp6() -> List[str]:
     return rows
 
 
+def _merge_scenarios(data: List[dict], replaces) -> None:
+    """Merge rows into results/storage/scenarios.json.
+
+    Rows matching the ``replaces`` predicate are refreshed (the bench's own
+    previous rows are dropped from the file); every other row kind is kept.
+    Row kinds: single-stream rows carry neither key, multi-tenant rows
+    carry ``tenant``, fault rows carry ``fault`` — each bench replaces
+    exactly its own kind, so the three sweeps can be (re)run in any order.
+    """
+    scen = RESULTS / "scenarios.json"
+    kept = [r for r in (json.loads(scen.read_text())
+                        if scen.exists() else [])
+            if not replaces(r)]
+    scen.parent.mkdir(parents=True, exist_ok=True)
+    scen.write_text(json.dumps(kept + data, indent=1))
+
+
 def bench_scenarios() -> List[str]:
     """Open-loop scenario matrix: (scheme x workload x arrival) with the
     queueing-delay / service-time decomposition the closed-loop YCSB runs
@@ -287,14 +304,8 @@ def bench_scenarios() -> List[str]:
         duration=1800.0, warmup=120.0,
         db_factory=db_factory)
     data = matrix.run()
-    # merge: refresh the single-stream rows, keep any multi-tenant rows
-    # (bench_multitenant applies the same convention in reverse)
-    scen = RESULTS / "scenarios.json"
-    kept = [r for r in (json.loads(scen.read_text())
-                        if scen.exists() else [])
-            if "tenant" in r]
-    scen.parent.mkdir(parents=True, exist_ok=True)
-    scen.write_text(json.dumps(data + kept, indent=1))
+    _merge_scenarios(data,
+                     replaces=lambda r: "tenant" not in r and "fault" not in r)
     rows = []
     for r in data:
         rows.append(_row(
@@ -349,13 +360,7 @@ def bench_multitenant() -> List[str]:
         duration=1200.0, warmup=120.0,
         db_factory=db_factory)
     data = matrix.run()
-    # merge per-tenant rows into the shared scenario artifact, replacing
-    # any previous multi-tenant rows but keeping single-stream rows
-    scen = RESULTS / "scenarios.json"
-    kept = [r for r in (json.loads(scen.read_text())
-                        if scen.exists() else [])
-            if "tenant" not in r]
-    scen.write_text(json.dumps(kept + data, indent=1))
+    _merge_scenarios(data, replaces=lambda r: "tenant" in r)
     (RESULTS / "multitenant.json").write_text(json.dumps(data, indent=1))
     rows = []
     p999 = {}
@@ -381,6 +386,66 @@ def bench_multitenant() -> List[str]:
     return rows
 
 
+def bench_faults() -> List[str]:
+    """Crash/recovery + fault-injection scenarios (beyond the paper).
+
+    Sweeps B3 vs HHZS under (a) an SSD stall window plus a transient HDD
+    slowdown and (b) a mid-run crash with WAL-replay recovery, at an
+    offered load calibrated to ~50% of the weakest scheme's service rate.
+    Emits availability and during-stall tail columns per cell; rows merge
+    into results/storage/scenarios.json (single-stream and multi-tenant
+    rows are kept) and render as benchmarks/report.py's recovery table."""
+    from repro.workloads import PoissonArrivals, ScenarioMatrix
+    from repro.zoned.faults import FaultSpec, SlowWindow, StallWindow
+
+    def db_factory(scheme, ssd_zones):
+        sc = ScenarioConfig(ssd_zones=ssd_zones)
+        db = DB(scheme, sc)
+        n = sc.paper_keys // (4 * KEY_DIV)
+        run_load(db, n_keys=n)
+        db.flush_all()
+        db.n_keys = n
+        return db
+
+    # closed-loop probe anchors the offered rate (see bench_scenarios)
+    probe = db_factory("B3", 20)
+    spec = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
+    pr = run_workload(probe, spec, n_ops=2000, n_keys=probe.n_keys)
+    svc = max(pr.throughput, 1e-6)
+    matrix = ScenarioMatrix(
+        schemes=["B3", "HHZS"],
+        workloads=[spec],
+        arrivals=[PoissonArrivals(0.5 * svc)],
+        faults=[
+            FaultSpec(name="stall+slow",
+                      stalls=(StallWindow(at=300.0, duration=60.0,
+                                          device="ssd"),),
+                      slows=(SlowWindow(at=600.0, duration=120.0,
+                                        factor=4.0, device="hdd"),)),
+            FaultSpec(name="crash", crash_at=450.0),
+        ],
+        ssd_zone_budgets=[20],
+        duration=900.0, warmup=60.0,
+        db_factory=db_factory)
+    data = matrix.run()
+    _merge_scenarios(data, replaces=lambda r: "fault" in r)
+    (RESULTS / "faults.json").write_text(json.dumps(data, indent=1))
+    rows = []
+    for r in data:
+        crash = r.get("crash") or {}
+        stall = r.get("stall_p") or {}
+        rows.append(_row(
+            f"faults_{r['cell']}",
+            r["latency_p"]["p99"] * 1e6,
+            f"avail={r['availability']:.4f}"
+            f";p99={r['latency_p']['p99']*1e3:.1f}ms"
+            + (f";stall_p99={stall['p99']*1e3:.1f}ms" if stall else "")
+            + (f";downtime={crash['downtime']:.2f}s"
+               f";replayed={int(crash['replayed_records'])}"
+               f";lost={int(crash['lost_in_flight'])}" if crash else "")))
+    return rows
+
+
 ALL = {
     "table1": bench_table1,
     "fig2": bench_fig2,
@@ -392,6 +457,7 @@ ALL = {
     "exp6": bench_exp6,
     "scenarios": bench_scenarios,
     "multitenant": bench_multitenant,
+    "faults": bench_faults,
 }
 
 

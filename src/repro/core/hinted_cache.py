@@ -99,6 +99,39 @@ class HintedCache:
         self.backend.release_reserved_zone(victim)
         self.zone_evictions += 1
 
+    def on_zone_fault(self, zone: Zone) -> None:
+        """A cache zone was reset by a device fault: its blocks are gone.
+
+        Cache zones hold clean copies of HDD-resident blocks, so nothing
+        needs repair — drop the zone and the mapping entries pointing at
+        it (reads fall back to the HDD)."""
+        if zone is self.active:
+            self.active = None
+        if zone in self.zones:
+            self.zones.remove(zone)
+        kept: Deque[Tuple[int, int, int]] = deque()
+        for sst_id, blk, zid in self.fifo:
+            if zid == zone.zid:
+                self.mapping.pop((sst_id, blk), None)
+                s = self.by_sst.get(sst_id)
+                if s is not None:
+                    s.discard(blk)
+                    if not s:
+                        del self.by_sst[sst_id]
+            else:
+                kept.append((sst_id, blk, zid))
+        self.fifo = kept
+
+    def clear_volatile(self) -> None:
+        """Crash recovery: the in-memory mapping table is gone, so every
+        cached block is unreachable — the recovery zone-map rebuild has
+        already reset the zones; drop all bookkeeping (stats survive)."""
+        self.mapping.clear()
+        self.fifo.clear()
+        self.by_sst.clear()
+        self.zones = []
+        self.active = None
+
     def drop_sst(self, sst_id: int) -> None:
         """An SST died (compaction/migration): its cached blocks are stale."""
         blocks = self.by_sst.pop(sst_id, None)

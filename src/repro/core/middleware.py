@@ -12,7 +12,7 @@ flush/compaction/migration traffic is modelled faithfully.
 """
 from __future__ import annotations
 
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass
 from typing import (Callable, Dict, FrozenSet, Generator, List, Optional,
                     Set, Tuple, TYPE_CHECKING, Union)
@@ -67,12 +67,16 @@ class HybridZonedBackend:
         # ---- WAL state --------------------------------------------------
         self._wal_records: List[dict] = []   # {zone, dev, gens:set}
         self._cur_wal: Optional[dict] = None
+        # logical WAL payloads per MemTable generation — the replay source
+        # for crash recovery (RocksDB: log records keyed by log number).
+        # Dropped in wal_flushed() once the generation is durable as SSTs.
+        self._wal_payloads: Dict[int, List[tuple]] = defaultdict(list)
         self._wal_waiters: List = []
         # WAL-full backpressure hook (the LSM-tree forces a memtable switch
         # + flush, as RocksDB does when max_total_wal_size is hit)
         self.wal_pressure_cb = None
         # group commit: concurrent writers batch into one WAL I/O
-        self._wal_queue: List[tuple] = []
+        self._wal_queue: "deque[tuple]" = deque()
         self._wal_writer_running = False
 
         # ---- optional components ---------------------------------------
@@ -167,25 +171,30 @@ class HybridZonedBackend:
         # a half-written SST
         sst.locked = True
         try:
-            dev = self.device_of(tier)
-            total = sst.size_bytes
-            done = 0
-            zi = 0
-            tag = f"L{sst.level}"
-            while done < total:
-                n = min(self.io_chunk, total - done)
-                rem = n
-                while rem > 0:
-                    zone = zones[zi]
-                    take = min(rem, zone.remaining)
-                    if take == 0:
-                        zi += 1
-                        continue
-                    yield dev.append(zone, take, tag=tag)
-                    rem -= take
-                done += n
+            yield from self._stream_to_zones(
+                self.device_of(tier), list(zones), sst.size_bytes,
+                tag=f"L{sst.level}")
         finally:
             sst.locked = False
+
+    def _stream_to_zones(self, dev: ZonedDevice, zones: List[Zone],
+                         total: int, tag: str, background: bool = False):
+        """Generator: sequentially append ``total`` bytes across ``zones``
+        in ``io_chunk``-sized requests (shared by SST writes and repairs)."""
+        done = 0
+        zi = 0
+        while done < total:
+            n = min(self.io_chunk, total - done)
+            rem = n
+            while rem > 0:
+                zone = zones[zi]
+                take = min(rem, zone.remaining)
+                if take == 0:
+                    zi += 1
+                    continue
+                yield dev.append(zone, take, tag=tag, background=background)
+                rem -= take
+            done += n
 
     def delete_sst(self, sst: "SST") -> None:
         """SST removed by compaction: reset its zones (space reclaim)."""
@@ -257,14 +266,143 @@ class HybridZonedBackend:
         self.sim.process(self.cache.admit(sst.sid, block_idx, sst.tier))
 
     def hdd_read_rate(self) -> float:
+        """HDD block reads per second over a sliding window (§3.4 trigger).
+
+        Averages the ``w`` most recent *complete* one-second buckets
+        [now-w, now); the current second's partial bucket is excluded —
+        counting it while dividing by the full window dilutes the rate and
+        delays popularity migration right after a read burst.  Buckets that
+        fell out of the window are pruned on every call, so the dict stays
+        at ~w entries regardless of run length."""
         now = int(self.sim.now)
-        w = int(self._hdd_window)
-        total = sum(self._hdd_buckets.get(now - i, 0) for i in range(w))
-        # prune old buckets occasionally
-        if len(self._hdd_buckets) > 4 * w:
-            for k in [k for k in self._hdd_buckets if k < now - 2 * w]:
-                del self._hdd_buckets[k]
-        return total / max(self._hdd_window, 1e-9)
+        w = max(int(self._hdd_window), 1)
+        total = sum(self._hdd_buckets.get(now - i, 0) for i in range(1, w + 1))
+        stale = [k for k in self._hdd_buckets if k < now - w]
+        for k in stale:
+            del self._hdd_buckets[k]
+        return total / float(w)
+
+    # ==================================================================
+    # device fault handling (repro.zoned.faults)
+    # ==================================================================
+    def on_zone_fault(self, tier: str, zone: Zone) -> None:
+        """A zone was spontaneously reset by the device (torn zone).
+
+        The host detects it (ZNS reports zone state) and repairs according
+        to the owner: an SST zone keeps its allocation (so the allocator
+        cannot hand it out while degraded) and the SST is re-replicated to
+        fresh zones; a WAL zone's loss forces an immediate flush — the data
+        still lives in the MemTables, flushing makes it durable again; a
+        cache zone just drops its (clean-copy) mapping entries."""
+        dev = self.device_of(tier)
+        owner = zone.owner
+        dev.reset_zone(zone)
+        self.stats["zone_faults"] += 1
+        if owner is None:
+            return
+        if owner == "wal":
+            for rec in [r for r in self._wal_records if r["zone"] is zone]:
+                self._wal_records.remove(rec)
+                if rec is self._cur_wal:
+                    self._cur_wal = None
+            if self.wal_pressure_cb is not None:
+                self.wal_pressure_cb()
+            self._wake_wal_waiters()
+        elif owner == "cache":
+            if self.cache is not None:
+                self.cache.on_zone_fault(zone)
+            self._wake_wal_waiters()
+        elif owner.startswith("sst:"):
+            sst = self.ssts.get(int(owner.split(":", 1)[1]))
+            if sst is None:
+                return
+            # keep the torn zone allocated to its SST while the repair runs
+            # (a reset zone is EMPTY and the allocator would hand it out,
+            # leaving two owners); the repair's relocate() resets it anyway
+            zone.state = ZoneState.OPEN
+            zone.owner = owner
+            self.sim.process(self._repair_sst(sst))
+
+    def _repair_sst(self, sst: "SST"):
+        """Generator: re-create a full replacement copy of a degraded SST
+        (as a production deployment would from a replica), then swap."""
+        # wait out a compaction/migration holding the SST: compaction will
+        # delete it, migration rewrites it — either resolves the torn zone
+        while sst.locked or sst.migrating:
+            if self.ssts.get(sst.sid) is not sst:
+                return
+            yield self.sim.timeout(0.25, daemon=True)
+        if self.ssts.get(sst.sid) is not sst:
+            return
+        tier = sst.tier
+        zones = self.alloc_sst_zones(tier, sst.size_bytes, f"sst:{sst.sid}")
+        if zones is None:
+            tier = HDD if tier == SSD else SSD
+            zones = self.alloc_sst_zones(tier, sst.size_bytes,
+                                         f"sst:{sst.sid}")
+        if zones is None:
+            self.stats["unrepaired_sst_faults"] += 1
+            return
+        sst.locked = True
+        try:
+            src = self.device_of(sst.tier)
+            rem = sst.size_bytes
+            while rem > 0:
+                n = min(self.io_chunk, rem)
+                yield src.read(n, random=False, tag="repair", background=True)
+                rem -= n
+            yield from self._stream_to_zones(self.device_of(tier), zones,
+                                             sst.size_bytes, tag="repair",
+                                             background=True)
+        finally:
+            sst.locked = False
+        if self.ssts.get(sst.sid) is not sst:
+            for z in zones:   # compacted away mid-repair: give zones back
+                self.device_of(tier).reset_zone(z)
+            return
+        self.relocate(sst, tier, zones)
+        self.stats["repaired_ssts"] += 1
+
+    # ==================================================================
+    # crash / recovery (DB.crash() / DB.reopen())
+    # ==================================================================
+    def crash_volatile(self) -> None:
+        """Crash: the in-memory WAL machinery dies with the process; zones,
+        records and per-generation payloads are durable and survive."""
+        self._wal_waiters = []
+        self._wal_queue = deque()
+        self._wal_writer_running = False
+        # recovery starts a fresh WAL zone (RocksDB starts a new log file)
+        self._cur_wal = None
+
+    def reopen_rebuild(self, ssts: List["SST"]) -> None:
+        """Recovery: rebuild the SST registry, ``_ssd_level_counts`` and the
+        zone map from durable state.
+
+        ``ssts`` is the manifest — the SSTs that were durably installed at
+        crash time.  Every non-empty zone not referenced by an installed
+        SST or a live WAL record is garbage from in-flight work (partial
+        SST writes, compaction outputs, migration/repair destinations,
+        cache fills) and is reset; this single rule is the whole zone-map
+        rebuild."""
+        self.ssts = {}
+        self._ssd_level_counts = defaultdict(int)
+        for sst in ssts:
+            sst.locked = False
+            sst.migrating = False
+            self._register(sst)
+        # WAL records whose generations all flushed are dead weight
+        self._wal_records = [r for r in self._wal_records if r["gens"]]
+        live = {id(z) for s in ssts for z in s.zones}
+        live |= {id(r["zone"]) for r in self._wal_records}
+        for dev in (self.ssd, self.hdd):
+            for z in dev.zones:
+                if z.state != ZoneState.EMPTY and id(z) not in live:
+                    dev.reset_zone(z)
+        # the hinted cache's mapping table is in-memory: cold after restart
+        if self.cache is not None:
+            self.cache.clear_volatile()
+        self.placement.on_reopen()
 
     # ==================================================================
     # WAL manager
@@ -340,15 +478,44 @@ class HybridZonedBackend:
         records = yield ev
         return records
 
-    def wal_attribute(self, records, gen: int) -> None:
+    def wal_attribute(self, records, gen: int, key: Optional[int] = None,
+                      tomb: bool = False,
+                      value: Optional[bytes] = None) -> None:
+        """Attribute a group-committed batch's bytes to MemTable generation
+        ``gen`` and log the logical record for crash replay.
+
+        The payload is the durable mirror of the MemTable insert that just
+        happened: on ``DB.reopen()`` the live generations' payloads are
+        replayed back into fresh MemTables, in the original insert order."""
         for rec in records:
             rec["gens"].add(gen)
+        if key is not None:
+            self._wal_payloads[gen].append((key, tomb, value))
 
     def _wal_writer(self):
         try:
             while self._wal_queue:
-                batch, self._wal_queue = self._wal_queue, []
-                total = sum(n for n, _ in batch)
+                # bounded group commit: one batch never exceeds a WAL
+                # zone's capacity.  An unbounded batch deadlocks under
+                # bursts: writers are only acknowledged (and their data
+                # only inserted into MemTables) once the WHOLE batch is on
+                # stable storage, so a batch larger than the total WAL
+                # space would wait forever for zones that can only be
+                # freed by flushing data the batch itself still holds.
+                # Basic schemes can spill the WAL to HDD zones (smaller),
+                # so bound by the smallest device that may host it.
+                if self.placement.reserves_wal:
+                    cap = max(self.ssd.zone_capacity, 1)
+                else:
+                    cap = max(min(self.ssd.zone_capacity,
+                                  self.hdd.zone_capacity), 1)
+                batch: List[tuple] = []
+                total = 0
+                while self._wal_queue and \
+                        (not batch or total + self._wal_queue[0][0] <= cap):
+                    n, ev = self._wal_queue.popleft()
+                    batch.append((n, ev))
+                    total += n
                 touched = []
                 while total > 0:
                     rec = self._cur_wal
@@ -377,6 +544,8 @@ class HybridZonedBackend:
 
     def wal_flushed(self, gens: Set[int]) -> None:
         """MemTable generations persisted as SSTs: their WAL data is dead."""
+        for g in gens:
+            self._wal_payloads.pop(g, None)
         kept = []
         for rec in self._wal_records:
             rec["gens"] -= gens
@@ -439,7 +608,10 @@ class AdmissionConfig:
         Default token-bucket parameters (tokens/virtual-second, bucket
         size) and optional per-tenant ``{name: (rate, burst)}`` overrides.
         The default rate is infinite, i.e. tenants without an explicit
-        budget are not rate-limited.
+        budget are not rate-limited.  Bursts are normalized to >= 1.0
+        token: admitting one op costs one full token, so a bucket smaller
+        than one token could never admit anything — the tenant would be
+        starved forever regardless of its configured rate.
     """
 
     policy: str = "none"
@@ -449,6 +621,13 @@ class AdmissionConfig:
     bucket_rate: float = float("inf")
     bucket_burst: float = 1.0
     bucket_rates: Optional[Dict[str, Tuple[float, float]]] = None
+
+    def __post_init__(self):
+        self.bucket_burst = max(float(self.bucket_burst), 1.0)
+        if self.bucket_rates:
+            self.bucket_rates = {
+                t: (rate, max(float(burst), 1.0))
+                for t, (rate, burst) in self.bucket_rates.items()}
 
 
 class AdmissionController:

@@ -40,6 +40,10 @@ class PlacementPolicy:
     def start(self) -> None:
         """Spawn any background processes (AUTO's throughput monitor)."""
 
+    def on_reopen(self) -> None:
+        """Crash recovery: drop volatile state (hint-derived demand from
+        compactions that died with the crash, stale monitor samples)."""
+
     def choose_tier(self, level: int, source: str) -> str:
         raise NotImplementedError
 
@@ -95,6 +99,11 @@ class AutoPlacement(PlacementPolicy):
 
     def start(self) -> None:
         self.backend.sim.process(self._monitor())
+
+    def on_reopen(self) -> None:
+        # device counters survive a crash but the monitor didn't sample
+        # during the outage: resync so the first delta isn't inflated
+        self._last_write_bytes = self.backend.ssd.counters.write_bytes
 
     def _monitor(self):
         be = self.backend
@@ -154,6 +163,12 @@ class HHZSPlacement(PlacementPolicy):
                 self._live_compactions[hint.cid] = (lvl, max(0.0, rem - 1.0))
         elif isinstance(hint, CompactionDoneHint):
             self._live_compactions.pop(hint.cid, None)
+
+    def on_reopen(self) -> None:
+        # the compactions behind these demands died with the crash; their
+        # cids will never emit a Done hint, so the demand must be dropped
+        # here or it pins the tiering level forever
+        self._live_compactions.clear()
 
     def demand_of(self, level: int) -> float:
         if level == 0:

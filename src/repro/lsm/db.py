@@ -30,7 +30,7 @@ from ..core.placement import (AutoPlacement, BasicScheme, HHZSPlacement,
 from ..zoned.device import (MiB, ST14000_HDD, ZN540_SSD, DeviceTiming,
                             ZonedDevice)
 from ..zoned.sim import Sim
-from .tree import LSMConfig, LSMTree
+from .tree import LSMConfig, LSMTree, MemTable
 
 SCALE = 100  # paper sizes & bandwidths / SCALE
 
@@ -126,6 +126,8 @@ class DB:
         # consulted by submit(..., tenant=...) and the open-loop runners
         self.admission = AdmissionController(self.sim, self.backend,
                                              admission)
+        self._crashed = False
+        self.recovery: Optional[dict] = None   # stats of the last reopen()
         self.backend.start()
 
     # ---- synchronous helpers (tests / examples) -----------------------
@@ -151,6 +153,100 @@ class DB:
     def drain(self) -> None:
         """Run the simulator until all background work settles."""
         self.sim.run()
+
+    # ---- crash / recovery ---------------------------------------------
+    def crash(self) -> None:
+        """Power loss at the current virtual instant.
+
+        Everything volatile dies: the MemTables (active, immutable and
+        flushing), every in-flight op and background job (the whole event
+        heap), the device service queues and the WAL group-commit queue.
+        Durable state survives: zones and their write pointers, installed
+        SSTs (the manifest), and live WAL records with their logical
+        payloads.  Call :meth:`reopen` to recover; until then the store
+        must not be used.
+        """
+        sim = self.sim
+        # pin everything we are about to kill: dropping the last reference
+        # to a suspended generator raises GeneratorExit inside it, running
+        # its `finally` blocks (semaphore releases, waiter wake-ups) and
+        # thereby resurrecting other dead processes — but a power loss
+        # must not execute ANY further code.  The graveyard keeps the dead
+        # suspended forever instead.
+        g = sim.graveyard
+        g.append(list(sim._heap))
+        g.append(self.backend._wal_waiters)
+        g.append(self.backend._wal_queue)
+        g.append(self.tree._stall_waiters)
+        g.append(self.tree._flush_watchers)
+        g.append(self.tree.jobs._queue)
+        g.append(self.tree)
+        # every pending event — in-flight ops, flush/compaction/migration
+        # jobs, daemon pollers — dies with the process
+        sim._heap.clear()
+        sim._live = 0
+        for dev in (self.ssd, self.hdd):
+            dev.restart()
+        self.backend.crash_volatile()
+        self._crashed = True
+
+    def reopen_gen(self):
+        """Generator: recovery in virtual time (replay I/O is charged).
+
+        Mirrors RocksDB recovery on zoned storage: rebuild the SST registry
+        and level counts from the manifest, reset every zone not referenced
+        by durable state (partial SST writes, compaction outputs, migration
+        destinations, cache fills), then read the live WAL zones and replay
+        their logical records into fresh MemTables, oldest generation
+        first.  Returns (and stores in ``self.recovery``) replay stats.
+        """
+        if not self._crashed:
+            raise RuntimeError("reopen() requires a preceding crash()")
+        be, sim = self.backend, self.sim
+        old = self.tree
+        ssts = sorted(old.manifest.values(), key=lambda s: s.sid)
+        be.reopen_rebuild(ssts)
+        # fresh LSM tree over the recovered registry (rebinds the WAL
+        # pressure callback and starts a new delayed-write controller)
+        tree = LSMTree(sim, self.scenario.lsm, be)
+        tree._next_sst = max([old._next_sst] + [s.sid for s in ssts])
+        for sst in ssts:
+            tree._install_sst(sst, sst.level)
+        for lvl in range(1, len(tree.levels)):
+            tree.levels[lvl].sort(key=lambda s: s.min_key)
+        # WAL replay: read every live WAL zone (recovery I/O is real I/O),
+        # then rebuild the MemTables from the per-generation payloads —
+        # ascending generations reproduce the original insert order, so
+        # newest-version-wins semantics are preserved exactly
+        for rec in be._wal_records:
+            if rec["zone"].write_ptr > 0:
+                yield rec["dev"].read(rec["zone"].write_ptr, random=False,
+                                      tag="recover")
+        gens = sorted({g for rec in be._wal_records for g in rec["gens"]})
+        replayed = 0
+        for g in gens:
+            mt = MemTable(gen=g)
+            for key, tomb, value in be._wal_payloads.get(g, ()):
+                mt.data[key] = (tomb, value)
+                replayed += 1
+            tree.immutables.append(mt)
+        # the new active generation must exceed every generation ever used,
+        # or a later flush could reclaim the new generation's WAL records
+        tree.memtable = MemTable(gen=old.memtable.gen + 1)
+        self.tree = tree
+        # restart background machinery (placement monitor, migrator loop)
+        be.start()
+        tree._kick_background()
+        self._crashed = False
+        self.recovery = {"at": sim.now,
+                         "live_wal_zones": len(be._wal_records),
+                         "replayed_gens": len(gens),
+                         "replayed_records": replayed}
+        return self.recovery
+
+    def reopen(self) -> dict:
+        """Synchronous crash recovery (see :meth:`reopen_gen`)."""
+        return self._run(self.reopen_gen())
 
     # ---- open-loop facade (repro.workloads.runner) --------------------
     @property

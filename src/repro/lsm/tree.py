@@ -79,6 +79,11 @@ class LSMTree:
         self.memtable = MemTable(gen=0)
         self.immutables: List[MemTable] = []
         self.levels: List[List[SST]] = [[] for _ in range(cfg.num_levels + 2)]
+        # the MANIFEST: durably-installed SSTs (sid -> SST).  RocksDB logs
+        # every install/delete to a synced MANIFEST file; this dict is its
+        # in-sim equivalent — DB.reopen() rebuilds the store from it, and
+        # anything registered but not installed here is lost in a crash.
+        self.manifest: Dict[int, SST] = {}
         self._next_sst = 0
         self._next_cid = 0
         self.jobs = Semaphore(sim, cfg.max_background_jobs)
@@ -121,10 +126,12 @@ class LSMTree:
     def _install_sst(self, sst: SST, level: int) -> None:
         self.levels[level].append(sst)
         self._level_bytes[level] += sst.size_bytes
+        self.manifest[sst.sid] = sst
 
     def _remove_sst(self, sst: SST) -> None:
         self.levels[sst.level].remove(sst)
         self._level_bytes[sst.level] -= sst.size_bytes
+        self.manifest.pop(sst.sid, None)
 
     def compaction_debt(self) -> int:
         return sum(max(0, self._level_bytes[l] - self.cfg.target_of(l))
@@ -175,11 +182,13 @@ class LSMTree:
                 self.stats["delayed_writes"] += 1
                 yield self.sim.timeout(target - self.sim.now)
         wal_recs = yield from self.backend.wal_append(self.cfg.obj_size)
-        self.memtable.data[key] = (tombstone,
-                                   value if self.cfg.store_values else None)
-        # attribute the WAL bytes to the generation the data actually
-        # landed in (the memtable may have rotated while queued)
-        self.backend.wal_attribute(wal_recs, self.memtable.gen)
+        stored = value if self.cfg.store_values else None
+        self.memtable.data[key] = (tombstone, stored)
+        # attribute the WAL bytes (and the logical record, for crash
+        # replay) to the generation the data actually landed in (the
+        # memtable may have rotated while queued)
+        self.backend.wal_attribute(wal_recs, self.memtable.gen,
+                                   key=key, tomb=tombstone, value=stored)
         if len(self.memtable) >= self.cfg.memtable_max_objs:
             self._rotate_memtable()
 
@@ -313,6 +322,13 @@ class LSMTree:
         if not src:
             return None
         if level == 0:
+            # L0 files overlap freely, so L0 compaction must take ALL of
+            # them — if any is locked, a previous L0 compaction is still
+            # running and a second one over the leftover files would
+            # install L1 outputs overlapping the first one's (breaking the
+            # disjointness invariant the read path depends on)
+            if any(s.locked for s in self.levels[0]):
+                return None
             picked = list(src)
             lo = min(s.min_key for s in picked)
             hi = max(s.max_key for s in picked)
@@ -440,14 +456,27 @@ class LSMTree:
         return (False, None)
 
     def scan(self, start_key: int, count: int) -> Generator:
-        """Range scan: read blocks covering [start, start+count) per level."""
+        """Range scan over [start, start+count): reads the covering blocks
+        per level and returns the number of *live* keys in the range.
+
+        Versions are deduplicated newest-first (memtables, then L0 by
+        birth, then deeper levels) and tombstoned keys are skipped, so the
+        count is exact — identical across schemes and equal to a dict
+        model's, independent of compaction timing.  I/O is still charged
+        for every overlapping SST (shadowed versions must be read to be
+        discarded, as in a real merging iterator)."""
         self.stats["scans"] += 1
         end_key = start_key + count
-        seen = 0
-        for m in [self.memtable] + self.immutables + self._flushing:
-            seen += sum(1 for k in m.data if start_key <= k < end_key)
+        newest: Dict[int, bool] = {}   # key -> newest version is a tombstone
+        for m in [self.memtable] + list(reversed(self.immutables)) \
+                + list(reversed(self._flushing)):
+            for k, (tomb, _) in m.data.items():
+                if start_key <= k < end_key:
+                    newest.setdefault(k, tomb)
         for lvl in range(len(self.levels)):
-            for sst in self.levels[lvl]:
+            ssts = (sorted(self.levels[0], key=lambda s: -s.birth)
+                    if lvl == 0 else self.levels[lvl])
+            for sst in ssts:
                 if not sst.overlaps(start_key, end_key - 1):
                     continue
                 cnt = sst.count_in_range(start_key, end_key)
@@ -461,5 +490,6 @@ class LSMTree:
                     if not self.block_cache.get(sst.sid, blk):
                         yield from self.backend.read_block(sst, blk)
                         self.block_cache.insert(sst.sid, blk)
-                seen += cnt
-        return seen
+                for i in range(a, a + cnt):
+                    newest.setdefault(int(sst.keys[i]), bool(sst.tombs[i]))
+        return sum(1 for tomb in newest.values() if not tomb)

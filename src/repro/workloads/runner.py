@@ -49,6 +49,7 @@ import numpy as np
 
 from ..core.middleware import (DELAY, REJECT, AdmissionConfig,
                                AdmissionController)
+from ..zoned.faults import FaultInjector, FaultSpec
 from .ycsb import (OP_NAMES, READ, OpStream, WorkloadSpec, YCSB, _pct,
                    collect_extras, run_load)
 
@@ -271,6 +272,22 @@ class OpenLoopResult:
                         ``holding`` (0 after a drained run), ``delay_time``
                         and ``mean_delay`` (virtual seconds); conservation:
                         ``arrived == admitted + rejected + holding``.
+
+    Fault-injection rows (``run_open_loop(faults=...)``) additionally carry:
+
+    ``fault``           the ``FaultSpec.label`` schedule description.
+    ``availability``    completed ops / offered ops — below 1.0 when a
+                        crash killed in-flight ops or refused arrivals
+                        during the outage.
+    ``stall_p``         sojourn percentiles over ops that *arrived inside a
+                        stall window* (the during-stall tail), when the
+                        spec has stall windows.
+    ``crash``           crash/recovery accounting, when the spec has a
+                        crash point: ``downtime`` (crash -> serving again,
+                        virtual s), ``lost_in_flight`` (ops killed by the
+                        crash), ``refused`` (arrivals during the outage),
+                        plus ``DB.recovery``'s ``live_wal_zones`` /
+                        ``replayed_gens`` / ``replayed_records``.
     """
 
     name: str                      # workload name
@@ -296,6 +313,11 @@ class OpenLoopResult:
     policy: Optional[str] = None
     protected: Optional[bool] = None
     admission: Optional[Dict[str, float]] = None
+    # set only on fault-injection rows (run_open_loop(faults=...))
+    fault: Optional[str] = None
+    availability: Optional[float] = None
+    stall_p: Optional[Dict[str, float]] = None
+    crash: Optional[Dict[str, float]] = None
 
     def row(self) -> str:
         tag = ""
@@ -305,13 +327,16 @@ class OpenLoopResult:
         shed = ""
         if self.admission and self.admission.get("rejected"):
             shed = f" shed={int(self.admission['rejected'])}"
+        extra = ""
+        if self.fault is not None:
+            extra = f" fault={self.fault} avail={self.availability:.4f}"
         return (f"{tag}{self.scheme:7s} {self.name:4s} {self.arrival:28s} "
                 f"offered={self.offered_rate:8.1f}/s "
                 f"thpt={self.throughput:8.1f}/s "
                 f"p99={self.latency_p.get('p99', 0)*1e3:9.2f}ms "
                 f"(queue {self.queue_p.get('p99', 0)*1e3:9.2f}ms / "
                 f"service {self.service_p.get('p99', 0)*1e3:8.2f}ms)"
-                f"{shed}")
+                f"{shed}{extra}")
 
     def to_json(self) -> Dict:
         d = {
@@ -330,6 +355,12 @@ class OpenLoopResult:
         if self.tenant is not None:
             d.update(tenant=self.tenant, policy=self.policy,
                      protected=self.protected, admission=self.admission)
+        if self.fault is not None:
+            d.update(fault=self.fault, availability=self.availability)
+            if self.stall_p is not None:
+                d["stall_p"] = self.stall_p
+            if self.crash is not None:
+                d["crash"] = self.crash
         return d
 
 
@@ -340,7 +371,8 @@ def _mean(arr: np.ndarray) -> float:
 def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
                   duration: float, n_keys: int, *, warmup: float = 0.0,
                   max_concurrency: int = 64, seed: int = 1,
-                  drain: bool = True) -> OpenLoopResult:
+                  drain: bool = True,
+                  faults: Optional[FaultSpec] = None) -> OpenLoopResult:
     """Open-loop run: ops arrive per ``arrival`` regardless of completion.
 
     A bounded pool of ``max_concurrency`` server processes (the store's
@@ -354,6 +386,15 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
     queued or in flight are excluded from statistics but remain pending
     work in the store — a later ``db.drain()`` or follow-up run on the
     same DB executes them, exactly as real queued requests would.
+
+    ``faults`` arms a :class:`repro.zoned.faults.FaultSpec` against the
+    run: stall/slow/zone-reset windows perturb the devices underneath the
+    unchanged engine, while ``crash_at`` kills the store mid-run
+    (``DB.crash()``) — every queued or in-flight op is lost, arrivals
+    during the outage are refused, and after ``DB.reopen()`` + WAL replay
+    a fresh server fleet resumes the remaining arrival stream.  The result
+    row then carries ``fault`` / ``availability`` / ``stall_p`` / ``crash``
+    (see :class:`OpenLoopResult`).
     """
     sim = db.sim
     rng = np.random.default_rng(seed + 2)
@@ -366,14 +407,17 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
     done = np.full(n, np.nan)
     queue: deque = deque()
     idle: List = []                       # events of parked servers
-    state = {"closed": False, "max_depth": 0}
+    state = {"closed": False, "max_depth": 0, "next": 0}
+    crash_info: Dict[str, float] = {}
 
     def dispatcher():
-        for i in range(n):
+        while state["next"] < n:
+            i = state["next"]
             at = t0 + float(rel[i])
             if at > sim.now:
                 yield sim.timeout(at - sim.now)
             arrive[i] = sim.now
+            state["next"] = i + 1
             queue.append(i)
             if len(queue) > state["max_depth"]:
                 state["max_depth"] = len(queue)
@@ -396,11 +440,51 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
             yield from stream.execute(i)
             done[i] = sim.now
 
+    def crash_ctl():
+        at = t0 + faults.crash_at
+        if at > sim.now:
+            yield sim.timeout(at - sim.now)
+        crash_info["lost_in_flight"] = \
+            int((~np.isnan(arrive) & np.isnan(done)).sum())
+        down0 = sim.now
+        db.crash()                 # kills the dispatcher and every server
+        queue.clear()
+        idle.clear()
+        rec = yield from db.reopen_gen()
+        crash_info.update(rec)
+        crash_info["downtime"] = sim.now - down0
+        # clients that knocked during the outage were refused: account
+        # their arrival, skip their execution
+        refused = 0
+        while state["next"] < n and t0 + float(rel[state["next"]]) <= sim.now:
+            i = state["next"]
+            arrive[i] = t0 + float(rel[i])
+            state["next"] = i + 1
+            refused += 1
+        crash_info["refused"] = refused
+        # the injector's processes died with the crash: re-arm the fault
+        # windows that have not fired yet on the original schedule
+        FaultInjector(db, faults).arm(t0=t0, after=sim.now - t0)
+        # fresh serving fleet resumes the remaining arrival stream
+        for _ in range(max_concurrency):
+            db.submit(server())
+        db.submit(dispatcher())
+
     procs = [db.submit(server()) for _ in range(max_concurrency)]
     procs.append(db.submit(dispatcher()))
+    crashing = faults is not None and faults.crash_at is not None
+    if faults is not None:
+        FaultInjector(db, faults).arm()
+        if crashing:
+            sim.process(crash_ctl())
     if drain:
-        for p in procs:
-            sim.run_until(p)
+        if crashing:
+            # the phase-1 processes die at the crash, so their completion
+            # events never fire: drive the run to global quiescence instead
+            sim.run()
+        else:
+            for p in procs:
+                sim.run_until(p)
     else:
         # hard time limit: stop at the end of the arrival window; ops still
         # queued or in flight are excluded from statistics below
@@ -408,11 +492,29 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
     busy_span = max(sim.now - t0, 1e-12)
 
     completed = ~np.isnan(done)
+    if crashing and completed.any():
+        # the crash path ran to global quiescence (sim.run()), which
+        # includes background compaction settling after the last op; clamp
+        # the busy span to the last completion so throughput stays
+        # comparable with non-crash cells (run_until stops there)
+        busy_span = max(float(done[completed].max()) - t0, 1e-12)
     measured = completed & (arrive - t0 >= warmup)
     total = done - arrive
     qdel = start - arrive
     serv = done - start
     reads = (stream.ops.codes == READ) & measured
+    fault_fields: Dict = {}
+    if faults is not None:
+        fault_fields["fault"] = faults.label
+        fault_fields["availability"] = float(completed.sum()) / max(n, 1)
+        if faults.stalls:
+            smask = np.zeros(n, bool)
+            for w in faults.stalls:
+                smask |= ((arrive >= t0 + w.at)
+                          & (arrive < t0 + w.at + w.duration))
+            fault_fields["stall_p"] = _pct(total[smask & measured])
+        if crashing:
+            fault_fields["crash"] = dict(crash_info)
     return OpenLoopResult(
         name=spec.name, scheme=db.scheme, arrival=arrival.name,
         n_arrived=n, n_measured=int(measured.sum()), duration=duration,
@@ -426,7 +528,8 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
         max_queue_depth=state["max_depth"],
         # snapshot: with drain=False the stream keeps mutating its counts
         # if leftover queued ops execute on a later drain
-        op_counts=dict(stream.counts), extras=collect_extras(db))
+        op_counts=dict(stream.counts), extras=collect_extras(db),
+        **fault_fields)
 
 
 # ======================================================================
@@ -667,11 +770,15 @@ class ScenarioCell:
     workload: WorkloadSpec
     arrival: ArrivalProcess
     ssd_zones: int
+    fault: Optional[FaultSpec] = None
 
     @property
     def name(self) -> str:
-        return (f"{self.scheme}/{self.workload.name}/"
+        base = (f"{self.scheme}/{self.workload.name}/"
                 f"{self.arrival.name}/z{self.ssd_zones}")
+        if self.fault is not None:
+            base += f"/f:{self.fault.name}"
+        return base
 
 
 @dataclass(frozen=True)
@@ -716,6 +823,13 @@ class ScenarioMatrix:
     every cell runs ``run_multi_tenant`` under each entry of ``policies``
     (policy names or ``AdmissionConfig``s), emitting one row *per tenant*
     per cell.
+
+    Fault mode: ``faults`` sweeps single-stream cells across
+    ``FaultSpec``s (device stalls, bandwidth degradation, zone resets,
+    mid-run crash + recovery); ``None`` entries keep the undisturbed
+    baseline cell.  Fault rows carry ``fault``/``availability``/
+    ``stall_p``/``crash`` fields and are rendered by
+    ``benchmarks.report.fault_recovery_table``.
     """
 
     schemes: Sequence[str]
@@ -730,6 +844,9 @@ class ScenarioMatrix:
     db_factory: Optional[object] = None   # (scheme, ssd_zones) -> loaded db
     tenants: Sequence[Sequence[TenantSpec]] = ()
     policies: Sequence[Union[str, AdmissionConfig]] = ("none",)
+    # fault-injection sweep dimension for single-stream cells (ignored in
+    # multi-tenant mode); None = the undisturbed baseline cell
+    faults: Sequence[Optional[FaultSpec]] = (None,)
     results: List[OpenLoopResult] = field(default_factory=list)
 
     def _workload_spec(self, w) -> WorkloadSpec:
@@ -742,11 +859,12 @@ class ScenarioMatrix:
                     for mix in self.tenants
                     for pol in self.policies
                     for z in self.ssd_zone_budgets]
-        return [ScenarioCell(s, self._workload_spec(w), a, z)
+        return [ScenarioCell(s, self._workload_spec(w), a, z, f)
                 for s in self.schemes
                 for w in self.workloads
                 for a in self.arrivals
-                for z in self.ssd_zone_budgets]
+                for z in self.ssd_zone_budgets
+                for f in self.faults]
 
     def _fresh_db(self, scheme: str, ssd_zones: int):
         if self.db_factory is not None:
@@ -778,7 +896,8 @@ class ScenarioMatrix:
                 per_cell = [run_open_loop(
                     db, cell.workload, cell.arrival, self.duration,
                     n_keys=n_keys, warmup=self.warmup,
-                    max_concurrency=self.max_concurrency, seed=self.seed)]
+                    max_concurrency=self.max_concurrency, seed=self.seed,
+                    faults=cell.fault)]
             for r in per_cell:
                 self.results.append(r)
                 row = r.to_json()

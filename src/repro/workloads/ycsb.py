@@ -129,8 +129,14 @@ class OpStream:
         self.load_order = getattr(db, "load_order",
                                   np.arange(n_keys, dtype=np.int64))
         self.frontier = n_keys            # total inserted keys (D/E inserts)
-        self.tree = db.tree
+        self.db = db
         self.counts = {name: 0 for name in OP_NAMES.values()}
+
+    @property
+    def tree(self):
+        # resolved per-op, not cached: DB.reopen() swaps in a fresh tree
+        # and queued ops must not write into the discarded one
+        return self.db.tree
 
     def resolve(self, code: int, rank: int) -> int:
         if self.spec.dist == "latest" and code == READ:

@@ -97,6 +97,10 @@ class ZonedDevice:
                                   for i in range(num_zones)]
         self._busy_until = 0.0
         self._bg_busy_until = 0.0
+        # fault-injection hooks (repro.zoned.faults): while sim.now is
+        # before _slow_until, service times are scaled by _slow_factor
+        self._slow_until = 0.0
+        self._slow_factor = 1.0
         self.counters = TrafficCounters()
         self.resets = 0
 
@@ -151,6 +155,8 @@ class ZonedDevice:
         consumes device capacity — foreground feels it as added busy time.
         """
         service = self._service_time(nbytes, kind)
+        if self.sim.now < self._slow_until:
+            service *= self._slow_factor
         if background:
             start = max(self.sim.now, self._bg_busy_until)
             end = start + service
@@ -195,6 +201,33 @@ class ZonedDevice:
              background: bool = False) -> Event:
         return self.io(nbytes, "rand_read" if random else "seq_read",
                        tag=tag, background=background)
+
+    # ------------------------------------------------------------------
+    # fault hooks (repro.zoned.faults)
+    # ------------------------------------------------------------------
+    def stall(self, duration: float) -> None:
+        """Freeze the device for new work: every I/O *submitted* from now
+        until the window ends queues behind it (models internal GC /
+        firmware hiccups).  I/O already submitted keeps its precomputed
+        completion time — the FIFO model schedules completions at submit,
+        so an in-flight request is treated as already past the point the
+        stall can affect."""
+        end = self.sim.now + duration
+        self._busy_until = max(self._busy_until, end)
+        self._bg_busy_until = max(self._bg_busy_until, end)
+
+    def degrade(self, duration: float, factor: float) -> None:
+        """Transient bandwidth degradation: service times are multiplied by
+        ``factor`` for I/O submitted in the next ``duration`` seconds."""
+        self._slow_until = max(self._slow_until, self.sim.now + duration)
+        self._slow_factor = factor
+
+    def restart(self) -> None:
+        """Crash/power-cycle hook: the in-device queue drains with the power
+        (queued service obligations are gone; zones keep their pointers)."""
+        self._busy_until = self._bg_busy_until = self.sim.now
+        self._slow_until = 0.0
+        self._slow_factor = 1.0
 
     # ------------------------------------------------------------------
     def utilization(self) -> float:

@@ -119,6 +119,12 @@ class Sim:
         self._heap: List[tuple] = []
         self._seq = 0
         self._live = 0  # non-daemon entries in the heap
+        # crash support (DB.crash): events/processes killed by a simulated
+        # power loss are pinned here so CPython never finalizes their
+        # suspended generators — GeneratorExit would run their `finally`
+        # blocks (semaphore releases, waiter wake-ups), resurrecting other
+        # dead processes after the crash
+        self.graveyard: List = []
 
     # -- scheduling -------------------------------------------------------
     def _schedule(self, at: float, ev: Event, value: Any,
@@ -159,12 +165,17 @@ class Sim:
 
     # -- running ----------------------------------------------------------
     def run(self, until: Optional[float] = None) -> None:
-        """Run until no *non-daemon* work remains (or virtual ``until``)."""
+        """Run until no *non-daemon* work remains (or virtual ``until``).
+
+        ``until`` never moves time backwards: a target already in the past
+        is a no-op (virtual time is monotonic; rewinding it would corrupt
+        every timestamp captured afterwards)."""
         heap = self._heap
         while heap and self._live > 0:
             at = heap[0][0]
             if until is not None and at > until:
-                self.now = until
+                if until > self.now:
+                    self.now = until
                 return
             # drain everything ready at this timestamp in one tight loop,
             # firing events inline (saves a method call per entry)
@@ -186,7 +197,7 @@ class Sim:
                     ev._waiters = None
                     for w in ws:
                         w(value)
-        if until is not None:
+        if until is not None and until > self.now:
             self.now = until
 
     def run_until(self, ev: Event) -> Any:

@@ -3,8 +3,9 @@
 Placement, migration and caching decide *where* bytes live and how long
 ops take — they must never change *what* a get/scan returns.  The same
 randomized put/get/delete/scan sequence runs through every scheme in
-``SCHEMES``; all answer streams must be byte-identical (and match a plain
-dict model).
+``SCHEMES``; all answer streams — including exact scan counts, which
+dedupe shadowed versions and skip tombstones — must be byte-identical
+(and match a plain dict model).
 """
 import numpy as np
 import pytest
@@ -42,9 +43,6 @@ def _run_sequence(scheme, ops):
         elif op == "get":
             out.append(("get", key, db.get(key)))
         else:
-            # scan counts include shadowed/tombstoned versions, so the raw
-            # number is compaction-timing (hence scheme) dependent; record
-            # it separately for the >= live-count property check
             scans.append((key, arg, db.scan(key, arg)))
     db.drain()
     # post-drain read-back: compaction/migration settled, answers unchanged
@@ -83,10 +81,10 @@ def test_all_schemes_agree_and_match_model(seed):
         for g, e in zip(got, expected):
             assert g == e, (f"scheme {scheme} diverges at {g[0]}({g[1]}): "
                             f"got {g[2]!r}, expected {e[2]!r}")
-        # scans must see at least every live key in range (they may also
-        # count not-yet-compacted shadowed versions)
+        # scans return exactly the live keys in range: shadowed versions
+        # deduped, tombstones skipped — identical across every scheme
         assert len(scans) == len(scan_live)
         for (k, n, seen), (k2, n2, live) in zip(scans, scan_live):
             assert (k, n) == (k2, n2)
-            assert seen >= live, (f"scheme {scheme} scan({k},{n}) saw "
-                                  f"{seen} < {live} live keys")
+            assert seen == live, (f"scheme {scheme} scan({k},{n}) saw "
+                                  f"{seen}, model says {live} live keys")

@@ -123,6 +123,36 @@ def test_cache_dropped_on_sst_death():
     assert (123, 0) not in c.mapping
 
 
+def test_hdd_read_rate_excludes_partial_current_second():
+    """Regression: the rate window included the partial current-second
+    bucket, diluting the rate (and delaying popularity migration) right
+    after a read burst."""
+    db = DB("HHZS", tiny_scenario())
+    be = db.backend
+    db.sim.now = 100.7
+    w = int(be._hdd_window)
+    for s in range(100 - w, 100):
+        be._hdd_buckets[s] = 5          # complete seconds: 5 reads/s
+    be._hdd_buckets[100] = 1            # partial current second: excluded
+    assert be.hdd_read_rate() == pytest.approx(5.0)
+
+
+def test_hdd_read_rate_prunes_stale_buckets():
+    """Regression: buckets in (now-2w, now-w] were retained forever while
+    the dict stayed small."""
+    db = DB("HHZS", tiny_scenario())
+    be = db.backend
+    w = int(be._hdd_window)
+    db.sim.now = 50.0
+    for s in range(40, 50):
+        be._hdd_buckets[s] = 3
+    assert be.hdd_read_rate() == pytest.approx(3.0)
+    db.sim.now = 50.0 + w + 3            # whole old window is now stale
+    assert be.hdd_read_rate() == 0.0
+    assert all(k >= int(db.sim.now) - w for k in be._hdd_buckets), \
+        "stale buckets must be pruned even when the dict is small"
+
+
 def test_auto_space_guards():
     db = DB("AUTO", tiny_scenario())
     pl = db.backend.placement

@@ -101,6 +101,29 @@ def test_zone_accounting_no_leaks(any_db):
             assert dev.zones[z.zid] is z
 
 
+def test_concurrent_burst_keeps_levels_disjoint():
+    """Regression: while one L0 compaction ran, a second one could start
+    over the leftover (overlapping) L0 files and install overlapping L1
+    SSTs — the read path then returned stale versions."""
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    rng = np.random.default_rng(7)
+    ops = [(int(k), b"v%d-%d" % (k, i))
+           for i, k in enumerate(rng.integers(0, 250, size=500))]
+    for k, v in ops:               # open-loop burst: compactions overlap
+        db.submit(db.tree.put(k, v))
+    db.drain()
+    model = {}
+    for k, v in ops:
+        model[k] = v
+    for lvl in range(1, len(db.tree.levels)):
+        ssts = sorted(db.tree.levels[lvl], key=lambda s: s.min_key)
+        for a, b in zip(ssts, ssts[1:]):
+            assert a.max_key < b.min_key, \
+                f"L{lvl} ranges overlap: {a.sid} and {b.sid}"
+    for k in sorted(model):
+        assert db.get(k) == (True, model[k])
+
+
 def test_overwrite_returns_latest():
     db = DB("HHZS", tiny_scenario(), store_values=True)
     for ver in range(5):

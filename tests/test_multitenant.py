@@ -161,6 +161,28 @@ def test_token_bucket_limits_tenant_rate():
     assert steady["rejected"] == 0
 
 
+def test_token_bucket_sub_unit_burst_not_starved():
+    """Regression: a tenant configured with burst < 1.0 could never
+    accumulate the full token an admit costs, so it was rejected forever
+    regardless of its rate.  Bursts are normalized to >= 1 token."""
+    cfg = AdmissionConfig(policy="token_bucket",
+                          bucket_rates={"t": (5.0, 0.2)})
+    assert cfg.bucket_rates["t"] == (5.0, 1.0)
+    db = DB("HHZS", tiny_scenario(), store_values=True, admission=cfg)
+
+    def op():
+        yield db.sim.timeout(0.001)
+
+    admitted = 0
+    for _ in range(20):
+        admitted += db.submit(op(), tenant="t") is not None
+        db.run_for(0.25)       # rate 5/s: a full token well within 0.25 s
+    assert admitted == 20, "normalized burst must admit at the token rate"
+    # the default burst is normalized too
+    assert AdmissionConfig(policy="token_bucket",
+                           bucket_burst=0.01).bucket_burst == 1.0
+
+
 def test_db_submit_routes_through_admission():
     db = DB("HHZS", tiny_scenario(), store_values=True,
             admission=AdmissionConfig(policy="token_bucket",

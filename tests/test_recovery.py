@@ -1,0 +1,206 @@
+"""Crash/recovery: differential correctness + post-recovery invariants.
+
+``DB.crash()`` at an arbitrary mid-run point discards everything volatile
+(MemTables, in-flight ops, background jobs, device queues); ``DB.reopen()``
+rebuilds the zone map / SST registry / level counts from durable state and
+replays the live WAL generations.  The acceptance invariant: for every
+scheme, every *acknowledged* write (a put/delete whose op completed before
+the crash) must read back exactly as a dict model predicts — unacknowledged
+in-flight writes may be lost, acknowledged ones never.
+"""
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from test_invariants import _assert_level_counts_match
+from repro.lsm import DB, SCHEMES
+from repro.zoned.device import ZoneState
+
+
+def _mixed_ops(seed, n_ops, key_space=300):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        key = int(rng.integers(key_space))
+        if r < 0.7:
+            ops.append(("put", key,
+                        b"v%d-%d" % (key, int(rng.integers(1 << 16)))))
+        else:
+            ops.append(("del", key, None))
+    return ops
+
+
+def _submit_all(db, ops, completed, delta=0.0):
+    """Dispatch every op open-loop; acknowledged ops land in ``completed``
+    in completion order (the order WAL replay must reproduce)."""
+
+    def op_proc(op):
+        kind, key, val = op
+        if kind == "put":
+            yield from db.tree.put(key, val)
+        else:
+            yield from db.tree.delete(key)
+
+    def dispatcher():
+        for op in ops:
+            p = db.submit(op_proc(op))
+            p.add_callback(lambda _v, op=op: completed.append(op))
+            if delta > 0:
+                yield db.sim.timeout(delta)
+
+    if delta > 0:
+        db.submit(dispatcher())
+    else:
+        for op in ops:
+            p = db.submit(op_proc(op))
+            p.add_callback(lambda _v, op=op: completed.append(op))
+
+
+def _model_of(acked):
+    model = {}
+    for kind, key, val in acked:
+        if kind == "put":
+            model[key] = val
+        else:
+            model.pop(key, None)
+    return model
+
+
+def _assert_reads_match(db, acked):
+    model = _model_of(acked)
+    for key in sorted({k for _, k, _ in acked}):
+        found, val = db.get(key)
+        assert found == (key in model), \
+            f"key {key}: found={found}, model has it: {key in model}"
+        if found:
+            assert val == model[key], \
+                f"key {key}: read {val!r}, acknowledged {model[key]!r}"
+
+
+def _assert_zone_static_invariants(db):
+    for dev in (db.ssd, db.hdd):
+        for z in dev.zones:
+            assert 0 <= z.write_ptr <= z.capacity
+            if z.state == ZoneState.EMPTY:
+                assert z.write_ptr == 0 and z.owner is None
+            if z.write_ptr == z.capacity:
+                assert z.state == ZoneState.FULL
+
+
+# ---------------------------------------------------------------------
+# the recovery differential, all 10 schemes
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_crash_recovery_differential(scheme):
+    """Crash mid-run: acknowledged writes survive, invariants hold."""
+    db = DB(scheme, tiny_scenario(), store_values=True)
+    ops = _mixed_ops(seed=0, n_ops=400)
+    completed = []
+    _submit_all(db, ops, completed, delta=0.003)
+    db.run_for(0.7)                    # arbitrary mid-run crash point
+    acked = list(completed)
+    assert 0 < len(acked) < len(ops), \
+        "crash point must leave both acknowledged and in-flight ops"
+    db.crash()
+    rec = db.reopen()
+    assert rec["replayed_records"] >= 0
+    _assert_reads_match(db, acked)
+    _assert_level_counts_match(db, "post-recovery")
+    _assert_zone_static_invariants(db)
+    # the store keeps serving after recovery, and survives a clean drain
+    for k in range(5):
+        db.put(10_000 + k, b"post")
+        assert db.get(10_000 + k) == (True, b"post")
+    db.flush_all()
+    db.drain()
+    _assert_reads_match(db, acked)
+    _assert_level_counts_match(db, "post-recovery drain")
+    _assert_zone_static_invariants(db)
+
+
+def test_crash_after_burst_replays_wal():
+    """A write burst crashed before its flush settles must be recovered
+    from the WAL payloads (this is the path with real replay volume)."""
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    ops = _mixed_ops(seed=1, n_ops=300)
+    completed = []
+    _submit_all(db, ops, completed)    # all at once: deep WAL backlog
+    db.run_for(2.0)
+    acked = list(completed)
+    assert len(acked) > 100
+    db.crash()
+    rec = db.reopen()
+    assert rec["replayed_records"] > 0, "burst crash must exercise replay"
+    _assert_reads_match(db, acked)
+    _assert_level_counts_match(db, "post-burst recovery")
+
+
+def test_crash_with_clean_state_recovers_from_ssts():
+    """After flush_all + drain nothing is volatile: recovery is a pure
+    manifest rebuild (no WAL replay) and reads come from SSTs."""
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    for k in range(600):
+        db.put(k, b"v%d" % k)
+    db.flush_all()
+    db.drain()
+    db.crash()
+    rec = db.reopen()
+    assert rec["replayed_records"] == 0
+    for k in range(0, 600, 13):
+        assert db.get(k) == (True, b"v%d" % k)
+    _assert_level_counts_match(db, "clean-state recovery")
+
+
+def test_repeated_crashes_converge():
+    """Crash -> reopen -> crash again (before any flush): the WAL payloads
+    must survive the first replay so the second recovery still works."""
+    db = DB("P", tiny_scenario(), store_values=True)
+    ops = _mixed_ops(seed=2, n_ops=200)
+    completed = []
+    _submit_all(db, ops, completed)
+    db.run_for(1.0)
+    acked = list(completed)
+    for _ in range(3):
+        db.crash()
+        db.reopen()
+    _assert_reads_match(db, acked)
+    db.flush_all()
+    db.drain()
+    _assert_reads_match(db, acked)
+
+
+def test_recovery_replay_costs_virtual_time():
+    """Reading the live WAL zones during reopen is charged as real I/O."""
+    db = DB("B3", tiny_scenario(), store_values=True)
+    for k in range(200):
+        db.put(k, b"x")
+    assert db.backend.wal_zones_in_use() >= 1
+    db.crash()
+    t0 = db.sim.now
+    db.reopen()
+    assert db.sim.now > t0, "WAL replay must advance virtual time"
+
+
+def test_reopen_requires_crash():
+    db = DB("B3", tiny_scenario(), store_values=True)
+    with pytest.raises(RuntimeError):
+        db.reopen()
+
+
+def test_crash_discards_unacknowledged_inflight_writes():
+    """Ops still queued in the WAL group commit at crash time were never
+    acknowledged; recovery must NOT resurrect them."""
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    db.put(1, b"committed")
+    db.flush_all()
+    db.drain()
+    completed = []
+    p = db.submit(db.tree.put(2, b"in-flight"))
+    p.add_callback(lambda _v: completed.append(True))
+    # crash immediately: the put sits in the group-commit queue, unacked
+    db.crash()
+    db.reopen()
+    assert not completed
+    assert db.get(1) == (True, b"committed")
+    assert db.get(2) == (False, None)

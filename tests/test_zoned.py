@@ -79,6 +79,24 @@ def test_background_io_consumes_capacity_without_queueing():
 
 
 # ---------------------------------------------------------------------
+def test_run_until_in_the_past_never_rewinds_time():
+    """Regression: run(until=t) with t < now used to set now = t, moving
+    virtual time backwards and corrupting every later timestamp."""
+    sim = Sim()
+    sim.timeout(5.0)
+    sim.run()
+    assert sim.now == 5.0
+    sim.run(until=1.0)                 # target already in the past: no-op
+    assert sim.now == 5.0
+    # early-return branch: next event beyond a past target must not rewind
+    sim.timeout(10.0)                  # scheduled at t=15
+    sim.run(until=3.0)
+    assert sim.now == 5.0
+    sim.run(until=20.0)
+    assert sim.now == 20.0
+
+
+# ---------------------------------------------------------------------
 def test_daemon_events_do_not_block_run():
     sim = Sim()
     ticks = []
