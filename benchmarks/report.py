@@ -92,6 +92,16 @@ def storage_tables() -> str:
         out.append("```json")
         out.append(json.dumps(json.loads(p.read_text()), indent=1)[:4000])
         out.append("```")
+    gp = grid_throughput_pivot()
+    if gp:
+        out.append("### full grid: scheme x workload throughput "
+                   "(ops/s, open-loop)")
+        out.append(gp)
+    gh = grid_tail_heatmap()
+    if gh:
+        out.append("### full grid: p99 queueing vs service tail "
+                   "(ms, poisson cells)")
+        out.append(gh)
     sc = scenario_matrix_table()
     if sc:
         out.append("### scenario matrix (open-loop)")
@@ -112,16 +122,100 @@ def _scenario_rows():
     return json.loads(p.read_text()) if p.exists() else []
 
 
+def _grid_rows():
+    """Single-stream rows of the full-grid sweep (YCSB letter workloads,
+    written by ``python -m repro.workloads.sweep``)."""
+    return [r for r in _scenario_rows()
+            if "tenant" not in r and "fault" not in r
+            and r.get("workload") in set("ABCDEF")]
+
+
+def _arrival_kind(name: str) -> str:
+    return name.split("(", 1)[0]
+
+
+def _scheme_order(schemes):
+    from repro.lsm.db import SCHEMES
+    known = [s for s in SCHEMES if s in schemes]
+    return known + sorted(set(schemes) - set(known))
+
+
+def grid_throughput_pivot() -> str:
+    """Scheme x workload throughput pivot, one table per (arrival kind,
+    SSD budget) — the paper's headline "highest throughput under various
+    settings" claim, readable at a glance.  Overloaded cells pin at the
+    scheme's service rate, so the pivot doubles as a capacity map."""
+    grid = _grid_rows()
+    if not grid:
+        return ""
+    groups = {}
+    for r in grid:
+        groups.setdefault((_arrival_kind(r["arrival"]), r["ssd_zones"]),
+                          {})[(r["scheme"], r["workload"])] = r["throughput"]
+    out = []
+    for (kind, z), cells in sorted(groups.items()):
+        schemes = _scheme_order({s for s, _ in cells})
+        workloads = sorted({w for _, w in cells})
+        out.append(f"**arrival={kind}, ssd_zones={z}** "
+                   f"({len(cells)} cells)")
+        out.append("| scheme | " + " | ".join(workloads) + " |")
+        out.append("|---" * (len(workloads) + 1) + "|")
+        for s in schemes:
+            vals = [f"{cells[(s, w)]:.1f}" if (s, w) in cells else "—"
+                    for w in workloads]
+            out.append(f"| {s} | " + " | ".join(vals) + " |")
+        out.append("")
+    return "\n".join(out).rstrip()
+
+
+def grid_tail_heatmap() -> str:
+    """Queueing-vs-service p99 decomposition per scheme x workload for the
+    stable (poisson) cells: each entry is ``q99/s99`` in ms.  Queueing
+    dwarfing service marks a saturated cell; service dominating marks
+    device-bound latency (the decomposition the closed-loop YCSB runs
+    cannot see)."""
+    grid = [r for r in _grid_rows()
+            if _arrival_kind(r["arrival"]) == "poisson"]
+    if not grid:
+        return ""
+    groups = {}
+    for r in grid:
+        groups.setdefault(r["ssd_zones"], {})[
+            (r["scheme"], r["workload"])] = (
+                r["queue_p"]["p99"] * 1e3, r["service_p"]["p99"] * 1e3)
+    out = []
+    for z, cells in sorted(groups.items()):
+        schemes = _scheme_order({s for s, _ in cells})
+        workloads = sorted({w for _, w in cells})
+        out.append(f"**ssd_zones={z}** (entries: p99 queue ms / "
+                   f"p99 service ms)")
+        out.append("| scheme | " + " | ".join(workloads) + " |")
+        out.append("|---" * (len(workloads) + 1) + "|")
+        for s in schemes:
+            vals = []
+            for w in workloads:
+                if (s, w) in cells:
+                    q, sv = cells[(s, w)]
+                    vals.append(f"{q:.0f}/{sv:.0f}")
+                else:
+                    vals.append("—")
+            out.append(f"| {s} | " + " | ".join(vals) + " |")
+        out.append("")
+    return "\n".join(out).rstrip()
+
+
 def scenario_matrix_table() -> str:
-    """Single-stream open-loop ScenarioMatrix rows
-    (results/storage/scenarios.json, rows without a ``tenant`` key):
-    queueing-delay vs service-time decomposition per cell."""
+    """Deep single-stream open-loop cells (the calibrated long-duration
+    "mix" rows from ``bench_scenarios``): queueing-delay vs service-time
+    decomposition per cell.  The full-grid YCSB A-F rows are rendered by
+    the pivot/heatmap tables above instead of one row per cell."""
     rows = ["| cell | offered/s | thpt/s | p50 ms | p99 ms |"
             " p99 queue ms | p99 service ms | max depth |",
             "|---|---|---|---|---|---|---|---|"]
     found = False
     for r in _scenario_rows():
-        if "tenant" in r or "fault" in r:
+        if "tenant" in r or "fault" in r \
+                or r.get("workload") in set("ABCDEF"):
             continue
         found = True
         rows.append(

@@ -259,39 +259,46 @@ def _merge_scenarios(data: List[dict], replaces) -> None:
     """Merge rows into results/storage/scenarios.json.
 
     Rows matching the ``replaces`` predicate are refreshed (the bench's own
-    previous rows are dropped from the file); every other row kind is kept.
+    previous rows are dropped from the file); every other row is kept.
     Row kinds: single-stream rows carry neither key, multi-tenant rows
     carry ``tenant``, fault rows carry ``fault`` — each bench replaces
-    exactly its own kind, so the three sweeps can be (re)run in any order.
+    exactly its own rows, so the sweeps can be (re)run in any order.
+    Single-stream rows now have two producers (the full-grid sweep driver
+    on YCSB A-F, and ``bench_scenarios``'s calibrated "mix" cells), so
+    predicates must discriminate by workload, not just by kind.
+
+    The merged file is schema-linted (``benchmarks.validate_results``)
+    before the write: a violation aborts with the old file intact.
     """
+    from benchmarks.validate_results import validate_rows
     scen = RESULTS / "scenarios.json"
     kept = [r for r in (json.loads(scen.read_text())
                         if scen.exists() else [])
             if not replaces(r)]
+    merged = kept + data
+    validate_rows(merged, str(scen), strict=True)
     scen.parent.mkdir(parents=True, exist_ok=True)
-    scen.write_text(json.dumps(kept + data, indent=1))
+    scen.write_text(json.dumps(merged, indent=1))
 
 
 def bench_scenarios() -> List[str]:
     """Open-loop scenario matrix: (scheme x workload x arrival) with the
     queueing-delay / service-time decomposition the closed-loop YCSB runs
     can't see.  Offered rates are calibrated from a closed-loop probe so
-    the bursty cells genuinely overload the store during bursts."""
+    the bursty cells genuinely overload the store during bursts.
+
+    Runs through the parallel sweep driver (``repro.workloads.sweep``) —
+    the same engine as the full YCSB A-F grid (``python -m
+    repro.workloads.sweep``); this bench keeps only the deep calibrated
+    "mix" cells at long duration, and replaces exactly those rows."""
     from repro.workloads import (BurstyArrivals, PoissonArrivals,
                                  ScenarioMatrix)
+    from repro.workloads.sweep import GridDBFactory, run_sweep
 
-    def db_factory(scheme, ssd_zones):
-        sc = ScenarioConfig(ssd_zones=ssd_zones)
-        db = DB(scheme, sc)
-        n = sc.paper_keys // (4 * KEY_DIV)
-        run_load(db, n_keys=n)
-        db.flush_all()
-        db.n_keys = n
-        return db
-
+    factory = GridDBFactory(key_div=KEY_DIV, load_div=4)
     # closed-loop probe on the weakest scheme: its service rate anchors
     # base (0.5x, stable) and burst (3x, overloaded) offered rates
-    probe = db_factory("B3", 20)
+    probe = factory("B3", 20)
     spec = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
     pr = run_workload(probe, spec, n_ops=2000, n_keys=probe.n_keys)
     svc = max(pr.throughput, 1e-6)
@@ -302,10 +309,11 @@ def bench_scenarios() -> List[str]:
                   BurstyArrivals(0.2 * svc, 3.0 * svc, on=60.0, off=240.0)],
         ssd_zone_budgets=[20],
         duration=1800.0, warmup=120.0,
-        db_factory=db_factory)
-    data = matrix.run()
-    _merge_scenarios(data,
-                     replaces=lambda r: "tenant" not in r and "fault" not in r)
+        key_div=KEY_DIV, db_factory=factory)
+    data = run_sweep(matrix, out=None, workers=2, resume=False,
+                     verbose=False)
+    _merge_scenarios(data, replaces=lambda r: r.get("workload") == "mix"
+                     and "tenant" not in r and "fault" not in r)
     rows = []
     for r in data:
         rows.append(_row(
@@ -361,6 +369,8 @@ def bench_multitenant() -> List[str]:
         db_factory=db_factory)
     data = matrix.run()
     _merge_scenarios(data, replaces=lambda r: "tenant" in r)
+    from benchmarks.validate_results import validate_rows
+    validate_rows(data, "multitenant.json", strict=True)
     (RESULTS / "multitenant.json").write_text(json.dumps(data, indent=1))
     rows = []
     p999 = {}
@@ -429,6 +439,8 @@ def bench_faults() -> List[str]:
         db_factory=db_factory)
     data = matrix.run()
     _merge_scenarios(data, replaces=lambda r: "fault" in r)
+    from benchmarks.validate_results import validate_rows
+    validate_rows(data, "faults.json", strict=True)
     (RESULTS / "faults.json").write_text(json.dumps(data, indent=1))
     rows = []
     for r in data:

@@ -1,0 +1,185 @@
+"""Schema linter for the scenario-row artifacts in ``results/storage/``.
+
+``results/storage/scenarios.json`` accumulates rows from three different
+sweeps — single-stream open-loop cells, per-tenant admission-control rows
+and fault-injection rows — and PRs 2-3 established the merge-never-
+overwrite invariant: each producer replaces exactly its own rows and keeps
+everything else.  That invariant is easy to break silently (a bench that
+rewrites the file drops another sweep's rows; a driver bug duplicates a
+cell), so this linter is run in CI and by every producer *before* writing:
+
+* row-kind discrimination: a row carrying ``tenant`` is a multi-tenant
+  row, one carrying ``fault`` is a fault row, else single-stream — and
+  each kind must carry its required columns;
+* no duplicate ``(cell, tenant)`` keys — the symptom of a bad merge;
+* value sanity: known scheme, finite non-negative rates/percentiles,
+  percentile dicts with the canonical p50..p9999 keys, admission
+  conservation (``arrived == admitted + rejected + holding``).
+
+CLI (non-zero exit on any violation)::
+
+  PYTHONPATH=src python -m benchmarks.validate_results            # defaults
+  PYTHONPATH=src python -m benchmarks.validate_results results/storage/smoke.json
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.lsm.db import SCHEMES
+
+PCT_KEYS = ("p50", "p90", "p99", "p999", "p9999")
+
+# columns every row kind must carry (OpenLoopResult.to_json + the cell
+# metadata ScenarioMatrix.run_cell attaches)
+BASE_COLUMNS = (
+    "workload", "scheme", "arrival", "n_arrived", "n_measured", "duration",
+    "offered_rate", "throughput", "latency_p", "queue_p", "service_p",
+    "read_latency_p", "mean_latency", "mean_queue", "mean_service",
+    "max_queue_depth", "op_counts", "extras", "cell", "ssd_zones",
+)
+TENANT_COLUMNS = ("tenant", "policy", "protected", "admission")
+FAULT_COLUMNS = ("fault", "availability")
+
+# row-count columns that must be non-negative finite numbers
+NUMERIC_COLUMNS = ("n_arrived", "n_measured", "duration", "offered_rate",
+                   "throughput", "mean_latency", "mean_queue",
+                   "mean_service", "max_queue_depth", "ssd_zones")
+
+
+def row_kind(row: Dict) -> str:
+    """Discriminate the three row kinds sharing scenarios.json."""
+    if "tenant" in row:
+        return "tenant"
+    if "fault" in row:
+        return "fault"
+    return "single"
+
+
+def _check_pct(errors: List[str], where: str, name: str, d) -> None:
+    if not isinstance(d, dict):
+        errors.append(f"{where}: {name} is not a dict")
+        return
+    missing = [k for k in PCT_KEYS if k not in d]
+    if missing:
+        errors.append(f"{where}: {name} missing keys {missing}")
+    bad = [k for k, v in d.items()
+           if not isinstance(v, (int, float)) or not math.isfinite(v)
+           or v < 0]
+    if bad:
+        errors.append(f"{where}: {name} non-finite/negative at {bad}")
+
+
+def validate_rows(rows, path: str = "<rows>",
+                  strict: bool = False) -> List[str]:
+    """Validate a scenario-row list; returns human-readable violations.
+
+    With ``strict=True`` raises ``ValueError`` on the first batch of
+    violations instead — the mode producers use as a pre-write gate.
+    """
+    errors: List[str] = []
+    if not isinstance(rows, list):
+        errors = [f"{path}: top level must be a list of rows"]
+        if strict:
+            raise ValueError("\n".join(errors))
+        return errors
+    seen: Dict[tuple, int] = {}
+    for i, row in enumerate(rows):
+        where = f"{path}[{i}]"
+        if not isinstance(row, dict):
+            errors.append(f"{where}: row is not an object")
+            continue
+        kind = row_kind(row)
+        where = f"{where}({kind}:{row.get('cell', '?')})"
+        required = BASE_COLUMNS + (
+            TENANT_COLUMNS if kind == "tenant"
+            else FAULT_COLUMNS if kind == "fault" else ())
+        missing = [c for c in required if c not in row]
+        if missing:
+            errors.append(f"{where}: missing columns {missing}")
+            continue
+        if kind == "tenant" and "fault" in row:
+            errors.append(f"{where}: row carries both tenant and fault "
+                          f"keys (kinds are mutually exclusive)")
+        key = (row["cell"], row.get("tenant"))
+        if key in seen:
+            errors.append(
+                f"{where}: duplicate cell key {key} (first at row "
+                f"{seen[key]}) — a merge overwrote or double-appended")
+        else:
+            seen[key] = i
+        if row["scheme"] not in SCHEMES:
+            errors.append(f"{where}: unknown scheme {row['scheme']!r}")
+        for col in NUMERIC_COLUMNS:
+            v = row[col]
+            if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                    or v < 0:
+                errors.append(f"{where}: {col}={v!r} not a non-negative "
+                              f"finite number")
+        for name in ("latency_p", "queue_p", "service_p", "read_latency_p"):
+            _check_pct(errors, where, name, row[name])
+        if not isinstance(row["op_counts"], dict) \
+                or not isinstance(row["extras"], dict):
+            errors.append(f"{where}: op_counts/extras must be objects")
+        if kind == "tenant":
+            a = row["admission"]
+            if not isinstance(a, dict):
+                errors.append(f"{where}: admission must be an object")
+            else:
+                need = ("arrived", "admitted", "rejected", "holding")
+                if all(k in a for k in need):
+                    if a["arrived"] != a["admitted"] + a["rejected"] \
+                            + a["holding"]:
+                        errors.append(
+                            f"{where}: admission conservation violated: "
+                            f"arrived={a['arrived']} != admitted+rejected"
+                            f"+holding="
+                            f"{a['admitted'] + a['rejected'] + a['holding']}")
+                else:
+                    errors.append(f"{where}: admission missing "
+                                  f"{[k for k in need if k not in a]}")
+        if kind == "fault":
+            av = row["availability"]
+            if not isinstance(av, (int, float)) or not 0 <= av <= 1:
+                errors.append(f"{where}: availability={av!r} not in [0,1]")
+    if strict and errors:
+        raise ValueError(f"{len(errors)} schema violations:\n"
+                         + "\n".join(errors))
+    return errors
+
+
+def validate_file(path: Path) -> List[str]:
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path}: unreadable ({exc})"]
+    return validate_rows(data, str(path))
+
+
+DEFAULT_TARGETS = ("scenarios.json", "multitenant.json", "faults.json")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv:
+        paths = [Path(a) for a in argv]
+    else:
+        d = Path("results/storage")
+        paths = [d / n for n in DEFAULT_TARGETS if (d / n).exists()]
+    errors: List[str] = []
+    for p in paths:
+        errs = validate_file(p)
+        errors.extend(errs)
+        n = len(json.loads(p.read_text())) if not errs and p.exists() else 0
+        status = "FAIL" if errs else f"ok ({n} rows)"
+        print(f"[validate] {p}: {status}", flush=True)
+    for e in errors:
+        print(f"  {e}", flush=True)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -725,7 +725,7 @@ class AdmissionController:
         c = self.tenant_counters(tenant)
         t0 = self.sim.now
         while self.under_pressure():
-            yield self.sim.timeout(self.cfg.poll_interval)
+            yield self.cfg.poll_interval   # bare-delay sleep
         c["delay_time"] += self.sim.now - t0
         c["holding"] -= 1
         c["admitted"] += 1

@@ -188,7 +188,7 @@ class Migrator:
                 # rate limiting: pace the *aggregate* migration stream
                 target = start + done / self.rate_limit
                 if be.sim.now < target:
-                    yield be.sim.timeout(target - be.sim.now)
+                    yield target - be.sim.now   # bare-delay: no Event
             if sst.locked or sst.sid not in be.ssts:
                 self.aborted += 1
                 for z in new_zones:

@@ -182,7 +182,11 @@ class DB:
         g.append(self.tree.jobs._queue)
         g.append(self.tree)
         # every pending event — in-flight ops, flush/compaction/migration
-        # jobs, daemon pollers — dies with the process
+        # jobs, daemon pollers — dies with the process, including the
+        # batched per-device completion queues (their heads are heap
+        # entries and die with the heap clear below)
+        for q in sim._mono:
+            g.append(q.crash_clear())
         sim._heap.clear()
         sim._live = 0
         for dev in (self.ssd, self.hdd):

@@ -180,7 +180,7 @@ class LSMTree:
             self._next_delayed_write = target
             if target > self.sim.now:
                 self.stats["delayed_writes"] += 1
-                yield self.sim.timeout(target - self.sim.now)
+                yield target - self.sim.now   # bare-delay: no Event
         wal_recs = yield from self.backend.wal_append(self.cfg.obj_size)
         stored = value if self.cfg.store_values else None
         self.memtable.data[key] = (tombstone, stored)

@@ -7,6 +7,9 @@ from .runner import (ArrivalProcess, PoissonArrivals, BurstyArrivals,
                      OpenLoopResult, run_open_loop,
                      TenantSpec, MultiTenantResult, run_multi_tenant,
                      ScenarioCell, MultiTenantCell, ScenarioMatrix)
+# NOTE: the sweep driver (repro.workloads.sweep) is imported explicitly,
+# not re-exported here — it doubles as `python -m repro.workloads.sweep`
+# and importing it at package load would shadow that entry point.
 
 __all__ = [
     "YCSB", "WorkloadSpec", "WorkloadResult", "Ops", "OpStream",

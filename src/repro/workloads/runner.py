@@ -43,7 +43,7 @@ import json
 from collections import deque
 from dataclasses import dataclass, field, replace
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -415,7 +415,7 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
             i = state["next"]
             at = t0 + float(rel[i])
             if at > sim.now:
-                yield sim.timeout(at - sim.now)
+                yield at - sim.now   # bare-delay: no Event
             arrive[i] = sim.now
             state["next"] = i + 1
             queue.append(i)
@@ -443,7 +443,7 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
     def crash_ctl():
         at = t0 + faults.crash_at
         if at > sim.now:
-            yield sim.timeout(at - sim.now)
+            yield at - sim.now   # bare-delay: no Event
         crash_info["lost_in_flight"] = \
             int((~np.isnan(arrive) & np.isnan(done)).sum())
         down0 = sim.now
@@ -685,7 +685,7 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
         for j in range(m):
             at = t0 + float(m_at[j])
             if at > sim.now:
-                yield sim.timeout(at - sim.now)
+                yield at - sim.now   # bare-delay: no Event
             ti, i = int(m_ti[j]), int(m_i[j])
             arrive[ti][i] = sim.now
             verdict = ctrl.decide(names[ti])
@@ -834,7 +834,10 @@ class ScenarioMatrix:
 
     schemes: Sequence[str]
     workloads: Sequence[Union[str, WorkloadSpec]]
-    arrivals: Sequence[ArrivalProcess]
+    # either one list for every workload, or {workload name: list} to give
+    # each workload its own (e.g. per-workload-calibrated) arrival rates
+    arrivals: Union[Sequence[ArrivalProcess],
+                    Mapping[str, Sequence[ArrivalProcess]]]
     ssd_zone_budgets: Sequence[int] = (20,)
     duration: float = 600.0            # virtual seconds of arrivals
     warmup: float = 60.0
@@ -852,6 +855,11 @@ class ScenarioMatrix:
     def _workload_spec(self, w) -> WorkloadSpec:
         return YCSB[w] if isinstance(w, str) else w
 
+    def _arrivals_of(self, spec: WorkloadSpec) -> Sequence[ArrivalProcess]:
+        if isinstance(self.arrivals, Mapping):
+            return self.arrivals[spec.name]
+        return self.arrivals
+
     def cells(self) -> List[Union[ScenarioCell, MultiTenantCell]]:
         if self.tenants:
             return [MultiTenantCell(s, tuple(mix), pol, z)
@@ -859,10 +867,10 @@ class ScenarioMatrix:
                     for mix in self.tenants
                     for pol in self.policies
                     for z in self.ssd_zone_budgets]
-        return [ScenarioCell(s, self._workload_spec(w), a, z, f)
+        return [ScenarioCell(s, w, a, z, f)
                 for s in self.schemes
-                for w in self.workloads
-                for a in self.arrivals
+                for w in map(self._workload_spec, self.workloads)
+                for a in self._arrivals_of(w)
                 for z in self.ssd_zone_budgets
                 for f in self.faults]
 
@@ -878,33 +886,50 @@ class ScenarioMatrix:
         db.n_keys = n_keys
         return db
 
+    def run_cell(self, cell: Union[ScenarioCell, MultiTenantCell]
+                 ) -> Tuple[List[OpenLoopResult], List[Dict]]:
+        """Run one fully-resolved cell on a freshly loaded store.
+
+        A cell's outcome depends only on the cell spec and the matrix's
+        sizing/seed fields — never on other cells — which is what lets the
+        sweep driver (``repro.workloads.sweep``) shard cells across worker
+        processes and still produce rows identical to a sequential run.
+        Returns the per-(sub)run results plus their JSON rows (one per
+        tenant for multi-tenant cells, else exactly one).
+        """
+        db = self._fresh_db(cell.scheme, cell.ssd_zones)
+        n_keys = getattr(db, "n_keys",
+                         db.scenario.paper_keys // self.key_div)
+        if isinstance(cell, MultiTenantCell):
+            res = run_multi_tenant(
+                db, list(cell.tenants), self.duration, n_keys=n_keys,
+                warmup=self.warmup,
+                max_concurrency=self.max_concurrency,
+                seed=self.seed, policy=cell.policy)
+            per_cell = res.tenants
+        else:
+            per_cell = [run_open_loop(
+                db, cell.workload, cell.arrival, self.duration,
+                n_keys=n_keys, warmup=self.warmup,
+                max_concurrency=self.max_concurrency, seed=self.seed,
+                faults=cell.fault)]
+        rows = []
+        for r in per_cell:
+            row = r.to_json()
+            row["ssd_zones"] = cell.ssd_zones
+            row["cell"] = cell.name
+            rows.append(row)
+        return per_cell, rows
+
     def run(self, out: Optional[Union[str, Path]] = None,
             verbose: bool = True) -> List[Dict]:
         rows: List[Dict] = []
         for cell in self.cells():
-            db = self._fresh_db(cell.scheme, cell.ssd_zones)
-            n_keys = getattr(db, "n_keys",
-                             db.scenario.paper_keys // self.key_div)
-            if isinstance(cell, MultiTenantCell):
-                res = run_multi_tenant(
-                    db, list(cell.tenants), self.duration, n_keys=n_keys,
-                    warmup=self.warmup,
-                    max_concurrency=self.max_concurrency,
-                    seed=self.seed, policy=cell.policy)
-                per_cell = res.tenants
-            else:
-                per_cell = [run_open_loop(
-                    db, cell.workload, cell.arrival, self.duration,
-                    n_keys=n_keys, warmup=self.warmup,
-                    max_concurrency=self.max_concurrency, seed=self.seed,
-                    faults=cell.fault)]
-            for r in per_cell:
-                self.results.append(r)
-                row = r.to_json()
-                row["ssd_zones"] = cell.ssd_zones
-                row["cell"] = cell.name
-                rows.append(row)
-                if verbose:
+            per_cell, cell_rows = self.run_cell(cell)
+            self.results.extend(per_cell)
+            rows.extend(cell_rows)
+            if verbose:
+                for r in per_cell:
                     print(r.row(), flush=True)
         if out is not None:
             out = Path(out)

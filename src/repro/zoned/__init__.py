@@ -1,4 +1,4 @@
-from .sim import Sim, Event, Process, Semaphore
+from .sim import Sim, Event, MonotoneQueue, Process, Semaphore
 from .device import (
     DeviceTiming, Zone, ZoneState, ZonedDevice, ZN540_SSD, ST14000_HDD,
     MiB, KiB,
@@ -7,7 +7,7 @@ from .faults import (FaultInjector, FaultSpec, SlowWindow, StallWindow,
                      ZoneReset)
 
 __all__ = [
-    "Sim", "Event", "Process", "Semaphore",
+    "Sim", "Event", "MonotoneQueue", "Process", "Semaphore",
     "DeviceTiming", "Zone", "ZoneState", "ZonedDevice",
     "ZN540_SSD", "ST14000_HDD", "MiB", "KiB",
     "FaultInjector", "FaultSpec", "StallWindow", "SlowWindow", "ZoneReset",

@@ -18,7 +18,7 @@ import enum
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-from .sim import Event, Sim
+from .sim import Sim
 
 MiB = float(1 << 20)
 KiB = float(1 << 10)
@@ -88,7 +88,7 @@ class ZonedDevice:
     """Append-only zoned device + FIFO service queue in virtual time."""
 
     def __init__(self, sim: Sim, name: str, timing: DeviceTiming,
-                 num_zones: int, zone_capacity: int):
+                 num_zones: int, zone_capacity: int, batched: bool = True):
         self.sim = sim
         self.name = name
         self.timing = timing
@@ -97,6 +97,14 @@ class ZonedDevice:
                                   for i in range(num_zones)]
         self._busy_until = 0.0
         self._bg_busy_until = 0.0
+        # batched completion path: each FIFO track completes I/O in
+        # nondecreasing time, so completions ride a per-track
+        # MonotoneQueue (O(1) schedule, one heap entry per track) instead
+        # of one heap timeout per request.  ``batched=False`` keeps the
+        # per-request heap path — bit-identical virtual times, used by the
+        # differential test in tests/test_zoned.py.
+        self._fg_q = sim.monotone_queue() if batched else None
+        self._bg_q = sim.monotone_queue() if batched else None
         # fault-injection hooks (repro.zoned.faults): while sim.now is
         # before _slow_until, service times are scaled by _slow_factor
         self._slow_until = 0.0
@@ -146,8 +154,14 @@ class ZonedDevice:
         raise ValueError(kind)
 
     def io(self, nbytes: float, kind: str, tag: str = "",
-           background: bool = False) -> Event:
-        """Submit an I/O; returns an Event fired at completion.
+           background: bool = False):
+        """Submit an I/O; returns a completion the caller ``yield``-s.
+
+        On the batched path this is a :class:`~repro.zoned.sim.MonotoneQueue`
+        completion ticket (no Event allocated); with ``batched=False`` (or
+        after a mid-crash ``restart()`` broke the track's monotonicity) it
+        is a real Event scheduled at the same absolute completion time.
+        Either way a process just ``yield``-s it.
 
         Foreground I/O queues FIFO.  Background I/O (rate-limited migration,
         cache-zone fills) models the drive's internal scheduler merging it
@@ -163,10 +177,12 @@ class ZonedDevice:
             self._bg_busy_until = end
             # capacity interference: foreground queue grows by the same work
             self._busy_until = max(self._busy_until, self.sim.now) + service
+            q = self._bg_q
         else:
             start = max(self.sim.now, self._busy_until)
             end = start + service
             self._busy_until = end
+            q = self._fg_q
         c = self.counters
         c.busy_time += service
         if kind.endswith("read"):
@@ -179,10 +195,12 @@ class ZonedDevice:
             c.write_ops += 1
             if tag:
                 c.by_tag_write[tag] = c.by_tag_write.get(tag, 0.0) + nbytes
-        return self.sim.timeout(end - self.sim.now)
+        if q is not None:
+            return q.complete_at(end)
+        return self.sim.schedule_at(end)
 
     def append(self, zone: Zone, nbytes: int, tag: str = "",
-               background: bool = False) -> Event:
+               background: bool = False):
         """Sequential append at the zone's write pointer (§2.1)."""
         if zone.state == ZoneState.FULL:
             raise RuntimeError(f"{self.name}: append to FULL zone {zone.zid}")
@@ -198,7 +216,7 @@ class ZonedDevice:
         return self.io(nbytes, "seq_write", tag=tag, background=background)
 
     def read(self, nbytes: float, random: bool, tag: str = "",
-             background: bool = False) -> Event:
+             background: bool = False):
         return self.io(nbytes, "rand_read" if random else "seq_read",
                        tag=tag, background=background)
 

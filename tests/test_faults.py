@@ -28,14 +28,21 @@ def _loaded(scheme="HHZS", n=1200):
 # ---------------------------------------------------------------------
 # device hooks
 # ---------------------------------------------------------------------
+def _when(sim, t, key, completion):
+    """Record in ``t[key]`` the virtual time the completion fires."""
+    def waiter():
+        yield completion
+        t.setdefault(key, sim.now)
+    sim.process(waiter())
+
+
 def test_stall_freezes_io():
     sim = Sim()
     dev = ZonedDevice(sim, "d", T, 4, 1 << 20)
     dev.stall(10.0)
     t = {}
-    dev.io(4096, "rand_read").add_callback(lambda _: t.setdefault("fg", sim.now))
-    dev.io(4096, "rand_read", background=True) \
-        .add_callback(lambda _: t.setdefault("bg", sim.now))
+    _when(sim, t, "fg", dev.io(4096, "rand_read"))
+    _when(sim, t, "bg", dev.io(4096, "rand_read", background=True))
     sim.run()
     # both tracks queue behind the stall window
     assert t["fg"] >= 10.0 and t["bg"] >= 10.0
@@ -45,9 +52,9 @@ def test_degrade_scales_service_inside_window_only():
     sim = Sim()
     dev = ZonedDevice(sim, "d", T, 4, 1 << 20)
     dev.degrade(5.0, 4.0)
-    ev = dev.io(4096, "rand_read")        # base service = 1/IOPS = 1 ms
     t = {}
-    ev.add_callback(lambda _: t.setdefault("slow", sim.now))
+    # base service = 1/IOPS = 1 ms
+    _when(sim, t, "slow", dev.io(4096, "rand_read"))
     sim.run()
     assert t["slow"] == pytest.approx(4e-3, rel=1e-6)
     # submissions after the window are back to full speed
@@ -56,9 +63,8 @@ def test_degrade_scales_service_inside_window_only():
     dev2.degrade(5.0, 4.0)
     sim2.timeout(6.0)
     sim2.run()
-    e = dev2.io(4096, "rand_read")
     t2 = {}
-    e.add_callback(lambda _: t2.setdefault("t", sim2.now))
+    _when(sim2, t2, "t", dev2.io(4096, "rand_read"))
     sim2.run()
     assert t2["t"] == pytest.approx(6.0 + 1e-3, rel=1e-6)
 
@@ -70,7 +76,7 @@ def test_restart_clears_queue_and_degradation():
     dev.degrade(100.0, 8.0)
     dev.restart()
     t = {}
-    dev.io(4096, "rand_read").add_callback(lambda _: t.setdefault("t", sim.now))
+    _when(sim, t, "t", dev.io(4096, "rand_read"))
     sim.run()
     assert t["t"] == pytest.approx(1e-3, rel=1e-6)
 

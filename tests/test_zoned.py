@@ -55,22 +55,28 @@ def test_service_times_match_table1_model():
 
 def test_fifo_queueing():
     sim, dev = make_dev()
-    ev1 = dev.io(MiB, "seq_write")
-    ev2 = dev.io(MiB, "seq_write")
     done = []
-    ev1.add_callback(lambda _: done.append(sim.now))
-    ev2.add_callback(lambda _: done.append(sim.now))
+
+    def waiter(ev):
+        yield ev
+        done.append(sim.now)
+
+    sim.process(waiter(dev.io(MiB, "seq_write")))
+    sim.process(waiter(dev.io(MiB, "seq_write")))
     sim.run()
     assert done[1] == pytest.approx(2 * done[0], rel=1e-6)
 
 
 def test_background_io_consumes_capacity_without_queueing():
     sim, dev = make_dev()
-    bg = dev.io(MiB, "seq_write", background=True)
-    fg = dev.io(4096, "rand_read")
     t = {}
-    bg.add_callback(lambda _: t.setdefault("bg", sim.now))
-    fg.add_callback(lambda _: t.setdefault("fg", sim.now))
+
+    def waiter(key, ev):
+        yield ev
+        t.setdefault(key, sim.now)
+
+    sim.process(waiter("bg", dev.io(MiB, "seq_write", background=True)))
+    sim.process(waiter("fg", dev.io(4096, "rand_read")))
     sim.run()
     # foreground queues behind the capacity the background op consumed
     assert t["fg"] > 1e-3
@@ -110,6 +116,190 @@ def test_daemon_events_do_not_block_run():
     sim.timeout(2.5)           # non-daemon work until t=2.5
     sim.run()
     assert sim.now == pytest.approx(2.5)
+
+
+# ---------------------------------------------------------------------
+# batched device queue + kernel bulk paths (PR 4)
+# ---------------------------------------------------------------------
+def _drive_trace(batched):
+    """Run a fixed mixed fg/bg I/O trace (with a mid-trace restart, which
+    breaks the monotone invariant) and return every completion time."""
+    sim = Sim()
+    dev = ZonedDevice(sim, "d", T, 4, 1 << 20, batched=batched)
+    times = []
+
+    def client(i):
+        for k in range(30):
+            yield dev.io(4096 * (1 + (i + k) % 5),
+                         "rand_read" if (i + k) % 3 else "seq_write",
+                         background=(k % 7 == 0))
+            times.append(sim.now)
+
+    def restarter():
+        yield sim.timeout(0.02)
+        dev.restart()       # pending completions now postdate new ends
+        yield dev.io(4096, "rand_read")
+        times.append(sim.now)
+
+    for i in range(4):
+        sim.process(client(i))
+    sim.process(restarter())
+    sim.run()
+    return times
+
+
+def test_batched_vs_unbatched_device_identical():
+    """The per-device completion batch is a pure scheduling optimization:
+    a fixed op trace yields bit-identical virtual completion times with
+    batching on and off (including across a restart() that forces the
+    non-monotone heap fallback)."""
+    assert _drive_trace(batched=True) == _drive_trace(batched=False)
+
+
+def test_monotone_queue_fallback_keeps_order():
+    sim = Sim()
+    q = sim.monotone_queue()
+    fired = []
+    for at in [1.0, 2.0, 1.5, 3.0, 0.5]:   # 1.5 and 0.5 break monotonicity
+        def waiter(ev, at=at):
+            yield ev
+            fired.append((at, sim.now))
+        sim.process(waiter(q.schedule_at(at)))
+    sim.run()
+    assert fired == sorted(fired, key=lambda x: x[0])
+    assert all(at == now for at, now in fired)
+
+
+def test_completion_ticket_unawaited_is_silent():
+    """A ticket nobody yields completes without firing anything — the
+    fire-and-forget background-I/O shape."""
+    sim = Sim()
+    q = sim.monotone_queue()
+    q.complete_at(1.0)
+    done = []
+
+    def waiter(ev):
+        yield ev
+        done.append(sim.now)
+
+    sim.process(waiter(q.complete_at(2.0)))
+    sim.run()
+    assert done == [2.0] and sim.now == 2.0
+
+
+def test_completion_ticket_yielded_after_fire_resumes_immediately():
+    """A ticket first yielded after its completion time must resume the
+    process at once (the already-triggered-Event semantics), not strand
+    it; awaiting the same ticket twice is an error."""
+    sim = Sim()
+    q = sim.monotone_queue()
+    marks = []
+
+    def proc():
+        t = q.complete_at(1.0, value="v")
+        yield sim.timeout(2.0)       # the ticket fires while we sleep
+        got = yield t
+        marks.append((sim.now, got))
+
+    sim.run_until(sim.process(proc()))
+    assert marks == [(2.0, "v")]
+
+    def awaiter(t):
+        yield t
+
+    def double():
+        t = q.complete_at(sim.now + 1.0)
+        sim.process(awaiter(t))      # first awaiter
+        yield sim.timeout(0.5)
+        yield t                      # second awaiter: error
+
+    with pytest.raises(RuntimeError, match="already awaited"):
+        sim.run_until(sim.process(double()))
+
+
+def test_schedule_many_matches_individual_timeouts():
+    delays = [0.003, 0.001, 0.004, 0.001, 0.005]   # deliberately unsorted
+    order_many, order_one = [], []
+    for order, use_many in [(order_many, True), (order_one, False)]:
+        sim = Sim()
+        if use_many:
+            evs = sim.schedule_many(delays, value="v")
+        else:
+            evs = [sim.timeout(d, value="v") for d in delays]
+
+        def waiter(i, ev, order=order, sim=sim):
+            got = yield ev
+            order.append((i, sim.now, got))
+
+        for i, ev in enumerate(evs):
+            sim.process(waiter(i, ev))
+        sim.run()
+    assert order_many == order_one
+    assert [i for i, _, _ in order_many] == [1, 3, 0, 2, 4]  # time, then seq
+    assert all(v == "v" for _, _, v in order_many)
+
+
+def test_schedule_many_sorted_batch_and_daemon():
+    sim = Sim()
+    evs = sim.schedule_many(i * 0.01 for i in range(100))
+    sim.run()
+    assert sim.now == pytest.approx(0.99) and all(e.triggered for e in evs)
+    # daemon batches do not keep run() alive
+    sim2 = Sim()
+    sim2.schedule_many([1.0, 2.0], daemon=True)
+    sim2.timeout(0.5)
+    sim2.run()
+    assert sim2.now == 0.5
+    with pytest.raises(ValueError):
+        sim2.schedule_many([0.1, -0.2])
+
+
+def test_bare_delay_yield_matches_timeout():
+    def run(bare):
+        sim = Sim()
+        marks = []
+
+        def proc():
+            for d in [0.25, 0.5, 0.125]:
+                if bare:
+                    yield d
+                else:
+                    yield sim.timeout(d)
+                marks.append(sim.now)
+
+        sim.run_until(sim.process(proc()))
+        return marks
+
+    assert run(True) == run(False) == [0.25, 0.75, 0.875]
+
+
+def test_bare_delay_negative_raises():
+    sim = Sim()
+
+    def proc():
+        yield -1.0
+
+    with pytest.raises(ValueError, match="negative delay"):
+        sim.run_until(sim.process(proc()))
+
+
+def test_run_until_with_device_queue_and_until_clamp():
+    """run(until=...) stops on time with completions still pending in a
+    device queue, then finishes them on the next run()."""
+    sim = Sim()
+    dev = ZonedDevice(sim, "d", T, 4, 1 << 20)
+    done = []
+
+    def client():
+        for _ in range(3):
+            yield dev.io(MiB, "seq_write")     # ~10ms each
+            done.append(sim.now)
+
+    sim.process(client())
+    sim.run(until=0.015)
+    assert sim.now == 0.015 and len(done) == 1
+    sim.run()
+    assert len(done) == 3
 
 
 def test_semaphore_limits_concurrency():
