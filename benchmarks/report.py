@@ -114,6 +114,15 @@ def storage_tables() -> str:
     if fr:
         out.append("### crash/recovery + fault injection")
         out.append(fr)
+    sa = slo_attainment_table()
+    if sa:
+        out.append("### SLO attainment: debt-aware control plane "
+                   "(bench_control)")
+        out.append(sa)
+    tl = timeline_table()
+    if tl:
+        out.append("### telemetry timelines (results/storage/timelines)")
+        out.append(tl)
     return "\n".join(out)
 
 
@@ -266,10 +275,13 @@ def fault_recovery_table() -> str:
     columns are the recovery accounting (downtime = crash to serving
     again, including WAL replay I/O; replayed = logical WAL records
     re-inserted; lost = in-flight ops killed + arrivals refused during
-    the outage)."""
-    rows = ["| cell | fault | offered/s | avail | p99 ms | stall p99 ms |"
-            " downtime s | replayed | lost |",
-            "|---|---|---|---|---|---|---|---|---|"]
+    the outage); ``rslo`` is the recovery-time SLO budget
+    (``FaultSpec.recovery_slo_s``) and whether the downtime met it.
+    Fault-injected multi-tenant rows (``run_multi_tenant(faults=...)``)
+    appear with their tenant name."""
+    rows = ["| cell | tenant | fault | offered/s | avail | p99 ms |"
+            " stall p99 ms | downtime s | replayed | lost | rslo |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
     found = False
     for r in _scenario_rows():
         if "fault" not in r:
@@ -279,16 +291,115 @@ def fault_recovery_table() -> str:
         crash = r.get("crash") or {}
         lost = (int(crash.get("lost_in_flight", 0))
                 + int(crash.get("refused", 0))) if crash else 0
+        if "recovery_slo_s" in r:
+            rslo = (f"{r['recovery_slo_s']:g}s "
+                    f"{'met' if r['recovery_slo_met'] else 'MISSED'}")
+        else:
+            rslo = "—"
         rows.append(
-            f"| {r['cell']} | {r['fault']} "
+            f"| {r['cell']} | {r.get('tenant') or '—'} | {r['fault']} "
             f"| {r['offered_rate']:.1f} "
             f"| {r['availability']:.4f} "
             f"| {r['latency_p']['p99']*1e3:.1f} "
             f"| {stall.get('p99', 0)*1e3:.1f} "
             f"| {crash.get('downtime', 0):.2f} "
             f"| {int(crash.get('replayed_records', 0))} "
-            f"| {lost} |")
+            f"| {lost} | {rslo} |")
     return "\n".join(rows) if found else ""
+
+
+def slo_attainment_table() -> str:
+    """SLO-attainment table from ``bench_control`` (tenant rows carrying
+    ``slo_p99``): per-tenant measured p99 vs target, whether it was met,
+    and goodput (ops/s completing within the target) — followed by the
+    policy comparison the experiment exists for: protected-tenant p99 and
+    total goodput per (scheme, policy), where the debt-aware ``feedback``
+    policy should dominate the static PR-2 policies."""
+    slo_rows = [r for r in _scenario_rows()
+                if "tenant" in r and r.get("slo_p99") is not None]
+    if not slo_rows:
+        return ""
+    out = ["| cell | tenant | policy | offered/s | admitted | shed |"
+           " p99 ms | slo ms | met | goodput/s |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in slo_rows:
+        a = r["admission"]
+        star = "*" if r.get("protected") else ""
+        out.append(
+            f"| {r['cell']} | {r['tenant']}{star} | {r['policy']} "
+            f"| {r['offered_rate']:.1f} "
+            f"| {int(a['admitted'])} | {int(a['rejected'])} "
+            f"| {r['latency_p']['p99']*1e3:.1f} "
+            f"| {r['slo_p99']*1e3:.1f} "
+            f"| {'yes' if r['slo_met'] else 'NO'} "
+            f"| {r['goodput']:.1f} |")
+    # policy comparison: protected p99 + total goodput per (scheme, policy)
+    prot, total = {}, {}
+    for r in slo_rows:
+        key = (r["scheme"], r["policy"])
+        total[key] = total.get(key, 0.0) + r.get("goodput", 0.0)
+        if r.get("protected"):
+            prot[key] = r["latency_p"]["p99"]
+    if prot:
+        out.append("")
+        out.append("**policy comparison** (protected p99 / total goodput)")
+        out.append("| scheme | policy | protected p99 ms | total goodput/s |")
+        out.append("|---|---|---|---|")
+        for (scheme, policy) in sorted(prot):
+            out.append(f"| {scheme} | {policy} "
+                       f"| {prot[(scheme, policy)]*1e3:.1f} "
+                       f"| {total[(scheme, policy)]:.1f} |")
+    return "\n".join(out)
+
+
+# series worth summarizing in the report (timelines carry ~30 more)
+_TIMELINE_SERIES = ("lsm.debt", "lsm.write_amp", "lsm.l0_files",
+                    "ssd.util", "hdd.util", "ssd.zones.open",
+                    "adm.pressure", "ctl.attainment")
+
+
+def _spark(values, buckets: int = 12) -> str:
+    """Downsample a series to a compact text trace (bucket means)."""
+    vals = [v for v in values if v is not None]
+    if not vals:
+        return "—"
+    chunks = []
+    n = -(-len(vals) // buckets)      # ceil: never drop the series tail
+    for i in range(0, len(vals), n):
+        window = vals[i:i + n]
+        chunks.append(sum(window) / len(window))
+    return " ".join(f"{v:.3g}" for v in chunks)
+
+
+def timeline_table() -> str:
+    """Per-cell summaries of the timeline artifacts the telemetry bus
+    (``repro.obs``) dumped into ``results/storage/timelines/``: min/mean/
+    max plus a downsampled trace for the headline series (compaction debt,
+    write amplification, device utilization/occupancy, admission pressure,
+    SLO attainment)."""
+    d = Path("results/storage/timelines")
+    files = sorted(d.glob("*.json")) if d.exists() else []
+    if not files:
+        return ""
+    out = ["| timeline | series | min | mean | max | trace (downsampled) |",
+           "|---|---|---|---|---|---|"]
+    for p in files:
+        try:
+            tl = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+        if tl.get("kind") != "timeline":
+            continue
+        label = tl.get("meta", {}).get("cell", p.stem)
+        for name in _TIMELINE_SERIES:
+            vs = [v for v in tl.get("series", {}).get(name, [])
+                  if v is not None]
+            if not vs:
+                continue
+            out.append(f"| {label} | {name} | {min(vs):.4g} "
+                       f"| {sum(vs)/len(vs):.4g} | {max(vs):.4g} "
+                       f"| {_spark(tl['series'][name])} |")
+    return "\n".join(out) if len(out) > 2 else ""
 
 
 if __name__ == "__main__":

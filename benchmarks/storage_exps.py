@@ -368,7 +368,10 @@ def bench_multitenant() -> List[str]:
         duration=1200.0, warmup=120.0,
         db_factory=db_factory)
     data = matrix.run()
-    _merge_scenarios(data, replaces=lambda r: "tenant" in r)
+    # replace only this bench's own tenants: bench_control publishes
+    # tenant rows too (prot/bulk) and must survive a multitenant re-run
+    _merge_scenarios(data, replaces=lambda r: r.get("tenant")
+                     in ("steady", "flash"))
     from benchmarks.validate_results import validate_rows
     validate_rows(data, "multitenant.json", strict=True)
     (RESULTS / "multitenant.json").write_text(json.dumps(data, indent=1))
@@ -432,13 +435,17 @@ def bench_faults() -> List[str]:
                                           device="ssd"),),
                       slows=(SlowWindow(at=600.0, duration=120.0,
                                         factor=4.0, device="hdd"),)),
-            FaultSpec(name="crash", crash_at=450.0),
+            # recovery-time SLO: the measured PR-3 downtime was 0.43-0.60s,
+            # so a 5s budget is a meaningful (not vacuous) gate on the
+            # WAL-replay path staying fast
+            FaultSpec(name="crash", crash_at=450.0, recovery_slo_s=5.0),
         ],
         ssd_zone_budgets=[20],
         duration=900.0, warmup=60.0,
         db_factory=db_factory)
     data = matrix.run()
-    _merge_scenarios(data, replaces=lambda r: "fault" in r)
+    _merge_scenarios(data, replaces=lambda r: "fault" in r
+                     and "tenant" not in r)
     from benchmarks.validate_results import validate_rows
     validate_rows(data, "faults.json", strict=True)
     (RESULTS / "faults.json").write_text(json.dumps(data, indent=1))
@@ -446,6 +453,10 @@ def bench_faults() -> List[str]:
     for r in data:
         crash = r.get("crash") or {}
         stall = r.get("stall_p") or {}
+        rslo = ""
+        if "recovery_slo_s" in r:
+            rslo = (f";rslo={r['recovery_slo_s']:g}s"
+                    f";rslo_met={r['recovery_slo_met']}")
         rows.append(_row(
             f"faults_{r['cell']}",
             r["latency_p"]["p99"] * 1e6,
@@ -454,7 +465,142 @@ def bench_faults() -> List[str]:
             + (f";stall_p99={stall['p99']*1e3:.1f}ms" if stall else "")
             + (f";downtime={crash['downtime']:.2f}s"
                f";replayed={int(crash['replayed_records'])}"
-               f";lost={int(crash['lost_in_flight'])}" if crash else "")))
+               f";lost={int(crash['lost_in_flight'])}" if crash else "")
+            + rslo))
+    return rows
+
+
+def bench_control() -> List[str]:
+    """SLO-attainment experiment: the compaction-debt control plane vs the
+    static PR-2 admission policies (closes the ROADMAP "smarter admission"
+    item).
+
+    A protected tenant ("prot", mixed read/write, Poisson at 0.25x the
+    probe's service capacity, sojourn-p99 SLO target anchored to the
+    probe's measured closed-loop tail) shares each store with a bulk
+    tenant running the same 50/50 mix at 1.2x capacity — its update half
+    is the compaction-debt driver, its read half makes every queued op
+    expensive, and the combined ~1.45x utilization grows the shared queue
+    whenever bulk is not shed.  The pool is sized to the probe (16
+    servers = 16 probe clients), making the probe's closed-loop
+    throughput the pool's actual capacity.  Policies compared per scheme:
+
+      reject         PR-2 reject-at-pressure (WAL stalls + backlog only)
+      token_bucket   PR-2 static per-tenant budget at bulk's nominal rate
+      reject+debt    reject-at-pressure with compaction debt as the third
+                     pressure signal (sheds while debt builds, before
+                     write stalls)
+      feedback       debt-aware AIMD feedback: bulk's token-bucket rate is
+                     driven by prot's measured p99 vs its SLO target and
+                     by the debt threshold (repro.obs.control.ControlPlane)
+
+    The headline: feedback's protected-tenant p99 is below both static
+    policies at equal-or-better total goodput (ops/s completing within
+    their tenant's SLO target).  Every cell runs with the telemetry bus
+    live and dumps a debt/occupancy/attainment timeline into
+    ``results/storage/timelines/``; rows merge into scenarios.json and
+    ``control.json``, rendered by ``benchmarks/report.py``.
+    """
+    from repro.core.middleware import AdmissionConfig
+    from repro.workloads import PoissonArrivals, ScenarioMatrix, TenantSpec
+
+    def db_factory(scheme, ssd_zones):
+        sc = ScenarioConfig(ssd_zones=ssd_zones)
+        db = DB(scheme, sc)
+        n = sc.paper_keys // (4 * KEY_DIV)
+        run_load(db, n_keys=n)
+        db.flush_all()
+        db.n_keys = n
+        return db
+
+    # closed-loop probe anchors offered rates, SLO targets and the debt
+    # threshold (deterministic, so cells are reproducible)
+    spec = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
+    bspec = WorkloadSpec("bulkmix", read=0.5, update=0.5, alpha=0.9)
+    probe = db_factory("B3", 20)
+    pr_mix = run_workload(probe, spec, n_ops=2000, n_keys=probe.n_keys)
+    svc_mix = max(pr_mix.throughput, 1e-6)
+    # SLO target: 1.5x the probe's closed-loop p99 — feasible whenever the
+    # shared queue stays short, hopeless behind a deep admission backlog
+    # (a queue pinned at reject's threshold alone costs ~threshold/svc
+    # seconds, well past the target)
+    slo_prot = round(1.5 * pr_mix.latency_p["p99"], 4)
+    # bulk's own target is 1.5x the protected one — lax but real (2x its
+    # service-time tail): goodput must not credit ops crammed through a
+    # 30-second admission queue
+    slo_bulk = round(1.5 * slo_prot, 4)
+    # debt threshold: above the standing post-load compaction backlog, so
+    # it fires on *growth* under the bulk tenant's update stream
+    debt0 = float(probe.tree.compaction_debt())
+    debt_th = round(1.5 * debt0 + 256 * MiB / SCALE, 1)
+    bulk_rate = round(1.2 * svc_mix, 4)
+    mix = [
+        TenantSpec("prot", spec, PoissonArrivals(round(0.25 * svc_mix, 4)),
+                   protected=True, slo_p99=slo_prot),
+        TenantSpec("bulk", bspec, PoissonArrivals(bulk_rate),
+                   slo_p99=slo_bulk),
+    ]
+    bucket = {"bulk": (bulk_rate, 20.0)}
+    matrix = ScenarioMatrix(
+        schemes=["B3", "HHZS"], workloads=[], arrivals=[],
+        tenants=[mix],
+        policies=[
+            AdmissionConfig(policy="reject", queue_threshold=96),
+            AdmissionConfig(policy="token_bucket", bucket_rates=bucket),
+            AdmissionConfig(policy="reject", queue_threshold=96,
+                            debt_threshold=debt_th, label="reject+debt"),
+            # feedback: fast control period, short p99 window (a stale
+            # window holds MD long after the queue drains — windup), a
+            # tight internal queue trigger (the plane's fast signal), and
+            # a gentle additive step so probing back up does not re-spike
+            # the queue
+            AdmissionConfig(policy="feedback", bucket_rates=bucket,
+                            debt_threshold=debt_th, label="feedback",
+                            queue_threshold=8, feedback_interval=2.5,
+                            feedback_window=60, feedback_increase=0.04),
+        ],
+        ssd_zone_budgets=[20],
+        duration=900.0, warmup=90.0,
+        # 16 servers to match the 16-client probe: the probe's closed-loop
+        # throughput is then the pool's actual service capacity, so the
+        # 1.2x combined offered load genuinely overloads the store
+        max_concurrency=16,
+        db_factory=db_factory,
+        telemetry=True, timeline_dir=RESULTS / "timelines")
+    data = matrix.run()
+    _merge_scenarios(data, replaces=lambda r: r.get("tenant")
+                     in ("prot", "bulk"))
+    from benchmarks.validate_results import validate_rows
+    validate_rows(data, "control.json", strict=True)
+    (RESULTS / "control.json").write_text(json.dumps(data, indent=1))
+    rows = []
+    prot_p99: Dict = {}
+    goodput: Dict = {}
+    for r in data:
+        key = (r["scheme"], r["policy"])
+        goodput[key] = goodput.get(key, 0.0) + r["goodput"]
+        if r["tenant"] == "prot":
+            prot_p99[key] = r["latency_p"]["p99"]
+        a = r["admission"]
+        rows.append(_row(
+            f"control_{r['cell']}_{r['tenant']}",
+            r["latency_p"]["p99"] * 1e6,
+            f"offered={r['offered_rate']:.1f}/s"
+            f";admitted={int(a['admitted'])}"
+            f";shed={int(a['rejected'])}"
+            f";p99={r['latency_p']['p99']*1e3:.1f}ms"
+            f";slo={r['slo_p99']*1e3:.1f}ms"
+            f";met={r['slo_met']}"
+            f";goodput={r['goodput']:.1f}/s"))
+    for scheme in ("B3", "HHZS"):
+        fb = (scheme, "feedback")
+        for base in ("reject", "token_bucket", "reject+debt"):
+            k = (scheme, base)
+            if fb in prot_p99 and k in prot_p99:
+                rows.append(_row(
+                    f"control_{scheme}_feedback_vs_{base}", 0.0,
+                    f"p99x={prot_p99[fb]/max(prot_p99[k], 1e-12):.3f}"
+                    f";goodputx={goodput[fb]/max(goodput[k], 1e-12):.3f}"))
     return rows
 
 
@@ -470,6 +616,7 @@ ALL = {
     "scenarios": bench_scenarios,
     "multitenant": bench_multitenant,
     "faults": bench_faults,
+    "control": bench_control,
 }
 
 

@@ -9,12 +9,22 @@ rewrites the file drops another sweep's rows; a driver bug duplicates a
 cell), so this linter is run in CI and by every producer *before* writing:
 
 * row-kind discrimination: a row carrying ``tenant`` is a multi-tenant
-  row, one carrying ``fault`` is a fault row, else single-stream — and
-  each kind must carry its required columns;
+  row (it may *also* carry fault columns — ``run_multi_tenant(faults=...)``
+  emits per-tenant availability), one carrying ``fault`` alone is a fault
+  row, else single-stream — and each kind must carry its required columns;
 * no duplicate ``(cell, tenant)`` keys — the symptom of a bad merge;
 * value sanity: known scheme, finite non-negative rates/percentiles,
   percentile dicts with the canonical p50..p9999 keys, admission
-  conservation (``arrived == admitted + rejected + holding``).
+  conservation (``arrived == admitted + rejected + holding``), SLO
+  columns (``slo_p99``/``slo_met``/``goodput``) and recovery-time SLO
+  columns (``recovery_slo_s``/``recovery_slo_met``) well-typed when
+  present.
+
+Timeline artifacts (``results/storage/timelines/*.json``, written by the
+``repro.obs`` metrics bus) are linted too — a timeline is a dict with
+``kind == "timeline"``, an ascending ``t`` sample vector and equal-length
+``series`` arrays of numbers/nulls; the CLI dispatches on shape, so
+timeline files can be passed alongside row artifacts.
 
 CLI (non-zero exit on any violation)::
 
@@ -101,9 +111,9 @@ def validate_rows(rows, path: str = "<rows>",
         if missing:
             errors.append(f"{where}: missing columns {missing}")
             continue
-        if kind == "tenant" and "fault" in row:
-            errors.append(f"{where}: row carries both tenant and fault "
-                          f"keys (kinds are mutually exclusive)")
+        if kind == "tenant" and "fault" in row and "availability" not in row:
+            errors.append(f"{where}: fault-injected tenant row must carry "
+                          f"availability")
         key = (row["cell"], row.get("tenant"))
         if key in seen:
             errors.append(
@@ -141,12 +151,91 @@ def validate_rows(rows, path: str = "<rows>",
                 else:
                     errors.append(f"{where}: admission missing "
                                   f"{[k for k in need if k not in a]}")
-        if kind == "fault":
+            # SLO-attainment columns (bench_control / TenantSpec.slo_p99)
+            g = row.get("goodput")
+            if g is not None and (not isinstance(g, (int, float))
+                                  or not math.isfinite(g) or g < 0):
+                errors.append(f"{where}: goodput={g!r} not a non-negative "
+                              f"finite number")
+            slo = row.get("slo_p99")
+            if slo is not None:
+                if not isinstance(slo, (int, float)) \
+                        or not math.isfinite(slo) or slo <= 0:
+                    errors.append(f"{where}: slo_p99={slo!r} not a "
+                                  f"positive finite number")
+                if not isinstance(row.get("slo_met"), bool):
+                    errors.append(f"{where}: slo_p99 rows must carry a "
+                                  f"boolean slo_met")
+        if "availability" in row:
             av = row["availability"]
             if not isinstance(av, (int, float)) or not 0 <= av <= 1:
                 errors.append(f"{where}: availability={av!r} not in [0,1]")
+        # recovery-time SLO columns on crash rows
+        rslo = row.get("recovery_slo_s")
+        if rslo is not None:
+            if not isinstance(rslo, (int, float)) \
+                    or not math.isfinite(rslo) or rslo <= 0:
+                errors.append(f"{where}: recovery_slo_s={rslo!r} not a "
+                              f"positive finite number")
+            if not isinstance(row.get("recovery_slo_met"), bool):
+                errors.append(f"{where}: recovery_slo_s rows must carry a "
+                              f"boolean recovery_slo_met")
+            if "crash" not in row:
+                errors.append(f"{where}: recovery_slo_s without crash "
+                              f"accounting")
     if strict and errors:
         raise ValueError(f"{len(errors)} schema violations:\n"
+                         + "\n".join(errors))
+    return errors
+
+
+def validate_timeline(obj, path: str = "<timeline>",
+                      strict: bool = False) -> List[str]:
+    """Lint one timeline artifact (``repro.obs.MetricsRegistry.timeline``).
+
+    Schema: ``{"kind": "timeline", "meta": {}, "sample_period": s > 0,
+    "t": [ascending samples], "series": {name: [num|null] * len(t)}}``.
+    """
+    errors: List[str] = []
+    if not isinstance(obj, dict) or obj.get("kind") != "timeline":
+        errors.append(f"{path}: not a timeline artifact "
+                      f"(kind != 'timeline')")
+    else:
+        sp = obj.get("sample_period")
+        if not isinstance(sp, (int, float)) or not math.isfinite(sp) \
+                or sp <= 0:
+            errors.append(f"{path}: sample_period={sp!r} not a positive "
+                          f"finite number")
+        if not isinstance(obj.get("meta"), dict):
+            errors.append(f"{path}: meta must be an object")
+        t = obj.get("t")
+        if not isinstance(t, list) or not all(
+                isinstance(v, (int, float)) and math.isfinite(v) and v >= 0
+                for v in t):
+            errors.append(f"{path}: t must be a list of non-negative "
+                          f"finite numbers")
+            t = []
+        elif any(b < a for a, b in zip(t, t[1:])):
+            errors.append(f"{path}: t must be nondecreasing")
+        series = obj.get("series")
+        if not isinstance(series, dict):
+            errors.append(f"{path}: series must be an object")
+        else:
+            for name, vs in series.items():
+                if not isinstance(vs, list) or len(vs) != len(t):
+                    errors.append(f"{path}: series {name!r} length "
+                                  f"{len(vs) if isinstance(vs, list) else '?'}"
+                                  f" != len(t)={len(t)}")
+                    continue
+                bad = [v for v in vs
+                       if v is not None
+                       and (not isinstance(v, (int, float))
+                            or not math.isfinite(v))]
+                if bad:
+                    errors.append(f"{path}: series {name!r} has non-finite "
+                                  f"entries {bad[:3]}")
+    if strict and errors:
+        raise ValueError(f"{len(errors)} timeline violations:\n"
                          + "\n".join(errors))
     return errors
 
@@ -156,10 +245,14 @@ def validate_file(path: Path) -> List[str]:
         data = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as exc:
         return [f"{path}: unreadable ({exc})"]
+    # dispatch on shape: timeline artifacts are dicts, row files are lists
+    if isinstance(data, dict) and data.get("kind") == "timeline":
+        return validate_timeline(data, str(path))
     return validate_rows(data, str(path))
 
 
-DEFAULT_TARGETS = ("scenarios.json", "multitenant.json", "faults.json")
+DEFAULT_TARGETS = ("scenarios.json", "multitenant.json", "faults.json",
+                   "control.json")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -169,12 +262,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     else:
         d = Path("results/storage")
         paths = [d / n for n in DEFAULT_TARGETS if (d / n).exists()]
+        paths += sorted((d / "timelines").glob("*.json"))
     errors: List[str] = []
     for p in paths:
         errs = validate_file(p)
         errors.extend(errs)
-        n = len(json.loads(p.read_text())) if not errs and p.exists() else 0
-        status = "FAIL" if errs else f"ok ({n} rows)"
+        if errs:
+            status = "FAIL"
+        else:
+            data = json.loads(p.read_text())
+            status = (f"ok ({len(data['t'])} samples, "
+                      f"{len(data['series'])} series)"
+                      if isinstance(data, dict)
+                      else f"ok ({len(data)} rows)")
         print(f"[validate] {p}: {status}", flush=True)
     for e in errors:
         print(f"  {e}", flush=True)

@@ -569,13 +569,40 @@ class HybridZonedBackend:
         for ev in waiters:
             ev.succeed()
 
+    # ==================================================================
+    # telemetry (repro.obs) — pull gauges only: zero hot-path overhead
+    # ==================================================================
+    def install_metrics(self, reg) -> None:
+        """Register the middleware's signals on a ``MetricsRegistry``.
+
+        Every signal maps to a paper hint family (§3.1): WAL pressure and
+        zone counts are the flush-side backpressure (§3.2 zone
+        organization), migration traffic is the §3.4 migrator at work,
+        cache hit rate is the §3.5 hinted cache paying off.
+        """
+        reg.gauge("mw.wal_pressure", lambda: float(self.wal_pressure()))
+        reg.gauge("mw.wal_zones", lambda: float(self.wal_zones_in_use()))
+        reg.gauge("mw.wal_stalls", lambda: self.stats["wal_stalls"])
+        reg.gauge("mw.hdd_read_rate", self.hdd_read_rate)
+        if self.cache is not None:
+            reg.gauge("mw.cache_hits", lambda: float(self.cache.hits))
+            reg.gauge("mw.cache_zones",
+                      lambda: float(len(self.cache.zones)))
+        if self.migrator is not None:
+            reg.gauge("mw.migrated_bytes",
+                      lambda: float(self.migrator.bytes_moved))
+            # migration traffic as a windowed rate (bytes/s between samples)
+            reg.collector(lambda: {
+                "mw.migration_rate": float(self.migrator.bytes_moved)},
+                rate=True)
+
 
 # ======================================================================
 # admission control / load shedding (multi-tenant serving)
 # ======================================================================
 ADMIT, REJECT, DELAY = "admit", "reject", "delay"
 
-ADMISSION_POLICIES = ("none", "reject", "delay", "token_bucket")
+ADMISSION_POLICIES = ("none", "reject", "delay", "token_bucket", "feedback")
 
 
 @dataclass
@@ -594,6 +621,13 @@ class AdmissionConfig:
         ``token_bucket``  per-tenant token bucket: ops above a tenant's
                           sustained ``rate`` (with ``burst`` headroom) are
                           shed regardless of store pressure.
+        ``feedback``      per-tenant token bucket whose rates are *driven*
+                          by the SLO feedback controller
+                          (``repro.obs.control.ControlPlane``): AIMD over
+                          the non-protected tenants' rates, keyed on the
+                          protected tenants' measured p99 vs their
+                          ``TenantSpec.slo_p99`` targets and on compaction
+                          debt vs ``debt_threshold``.
     protected
         Tenant names exempt from shedding/delaying under every policy —
         the SLO tenants the middleware exists to protect.
@@ -612,6 +646,26 @@ class AdmissionConfig:
         token: admitting one op costs one full token, so a bucket smaller
         than one token could never admit anything — the tenant would be
         starved forever regardless of its configured rate.
+    debt_threshold
+        Compaction-debt pressure signal (bytes): when set and the
+        controller has a ``debt_gauge`` (wired by ``DB`` / the runners to
+        ``LSMTree.compaction_debt``), debt above this threshold counts as
+        pressure for the ``reject``/``delay`` policies and as an
+        over-target condition for the ``feedback`` controller — shedding
+        starts while the debt is building, before it turns into write
+        stalls.
+    label
+        Optional display name for result rows / cell names, so two cells
+        sharing a policy kind but different parameters (e.g. ``reject``
+        with and without ``debt_threshold``) stay distinguishable.
+    feedback_interval / feedback_window / feedback_decrease /
+    feedback_increase / feedback_headroom / feedback_floor
+        Constants of the ``feedback`` policy's AIMD loop
+        (``repro.obs.control.ControlPlane``): control period in virtual
+        seconds, per-tenant latency samples for the p99 estimate,
+        multiplicative decrease factor, additive increase step and rate
+        floor (both as fractions of the tenant's base rate), and the
+        p99/target ratio below which additive increase engages.
     """
 
     policy: str = "none"
@@ -621,6 +675,14 @@ class AdmissionConfig:
     bucket_rate: float = float("inf")
     bucket_burst: float = 1.0
     bucket_rates: Optional[Dict[str, Tuple[float, float]]] = None
+    debt_threshold: Optional[float] = None
+    label: Optional[str] = None
+    feedback_interval: float = 5.0
+    feedback_window: int = 200
+    feedback_decrease: float = 0.7
+    feedback_increase: float = 0.08
+    feedback_headroom: float = 0.8
+    feedback_floor: float = 0.02
 
     def __post_init__(self):
         self.bucket_burst = max(float(self.bucket_burst), 1.0)
@@ -676,6 +738,14 @@ class AdmissionController:
         # service-backlog gauge, registered by the open-loop runner:
         # () -> current queue depth
         self.queue_gauge: Optional[Callable[[], int]] = None
+        # compaction-debt gauge (bytes), wired by DB / the runners to
+        # LSMTree.compaction_debt; consulted only when cfg.debt_threshold
+        # is set — the third pressure signal
+        self.debt_gauge: Optional[Callable[[], float]] = None
+        # live token-bucket rate overrides, driven by the SLO feedback
+        # controller (repro.obs.control.ControlPlane) under policy
+        # "feedback"; consulted before cfg.bucket_rates
+        self.rate_overrides: Dict[str, float] = {}
         self.counters: Dict[str, Dict[str, float]] = {}
         self._buckets: Dict[str, List[float]] = {}   # name -> [tokens, t]
 
@@ -692,7 +762,11 @@ class AdmissionController:
         if self.backend is not None and self.backend.wal_pressure():
             return True
         g = self.queue_gauge
-        return g is not None and g() > self.cfg.queue_threshold
+        if g is not None and g() > self.cfg.queue_threshold:
+            return True
+        d = self.debt_gauge
+        return (d is not None and self.cfg.debt_threshold is not None
+                and d() > self.cfg.debt_threshold)
 
     # ------------------------------------------------------------------
     def decide(self, tenant: str) -> str:
@@ -703,7 +777,7 @@ class AdmissionController:
         if pol == "none" or tenant in self.cfg.protected:
             c["admitted"] += 1
             return ADMIT
-        if pol == "token_bucket":
+        if pol == "token_bucket" or pol == "feedback":
             if self._take_token(tenant):
                 c["admitted"] += 1
                 return ADMIT
@@ -734,6 +808,9 @@ class AdmissionController:
         rates = self.cfg.bucket_rates or {}
         rate, burst = rates.get(tenant,
                                 (self.cfg.bucket_rate, self.cfg.bucket_burst))
+        ov = self.rate_overrides.get(tenant)
+        if ov is not None:
+            rate = ov
         if rate == float("inf"):
             return True
         now = self.sim.now
@@ -772,3 +849,24 @@ class AdmissionController:
         c["mean_delay"] = (c["delay_time"] / c["delayed"]
                            if c["delayed"] else 0.0)
         return c
+
+    @property
+    def policy_label(self) -> str:
+        """Display name for rows/cells: ``cfg.label`` or the policy kind."""
+        return self.cfg.label or self.cfg.policy
+
+    # ------------------------------------------------------------------
+    def install_metrics(self, reg) -> None:
+        """Per-tenant arrival/admit/reject *rates* (ops/s between samples)
+        on a ``MetricsRegistry``.  Collector-based because tenants appear
+        lazily (the key set grows as tenants send their first op)."""
+        def _collect() -> Dict[str, float]:
+            out: Dict[str, float] = {}
+            for t, c in self.counters.items():
+                out[f"adm.{t}.arrived"] = c["arrived"]
+                out[f"adm.{t}.admitted"] = c["admitted"]
+                out[f"adm.{t}.rejected"] = c["rejected"]
+            return out
+
+        reg.collector(_collect, rate=True, name="adm.tenants")
+        reg.gauge("adm.pressure", lambda: float(self.under_pressure()))

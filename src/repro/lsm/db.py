@@ -94,7 +94,8 @@ class DB:
     def __init__(self, scheme: str = "HHZS",
                  scenario: Optional[ScenarioConfig] = None,
                  store_values: bool = False,
-                 admission: "AdmissionConfig | str" = "none"):
+                 admission: "AdmissionConfig | str" = "none",
+                 telemetry: "bool | float" = False):
         base = scheme.split("+")[0]
         if scheme not in SCHEMES:
             raise ValueError(f"unknown scheme {scheme!r}; one of {SCHEMES}")
@@ -126,9 +127,43 @@ class DB:
         # consulted by submit(..., tenant=...) and the open-loop runners
         self.admission = AdmissionController(self.sim, self.backend,
                                              admission)
+        # compaction debt is the third admission pressure signal (consulted
+        # only when the policy sets a debt_threshold); the lambda reads
+        # through self.tree so it survives crash/reopen tree swaps
+        self.admission.debt_gauge = lambda: float(self.tree.compaction_debt())
         self._crashed = False
         self.recovery: Optional[dict] = None   # stats of the last reopen()
+        # telemetry bus (repro.obs): off by default; telemetry=True attaches
+        # a MetricsRegistry at the default sample period, a float sets the
+        # period in virtual seconds
+        self.metrics = None
+        if telemetry:
+            self.enable_telemetry(
+                5.0 if telemetry is True else float(telemetry))
         self.backend.start()
+
+    # ---- telemetry (repro.obs) ----------------------------------------
+    def enable_telemetry(self, sample_period: float = 5.0,
+                         capacity: int = 720):
+        """Attach a ``MetricsRegistry`` sampling every layer's signals on
+        the DES clock; idempotent.  Returns the registry.
+
+        All built-in signals are pull gauges over state the layers already
+        maintain, so enabling telemetry never changes the virtual-time
+        history of a run (asserted by ``tests/test_obs.py`` and the CI
+        grid-smoke telemetry leg)."""
+        if self.metrics is not None:
+            return self.metrics
+        from ..obs import MetricsRegistry
+        reg = MetricsRegistry(self.sim, sample_period, capacity)
+        self.ssd.install_metrics(reg, "ssd")
+        self.hdd.install_metrics(reg, "hdd")
+        self.backend.install_metrics(reg)
+        self.tree.install_metrics(reg)
+        self.admission.install_metrics(reg)
+        reg.start()
+        self.metrics = reg
+        return reg
 
     # ---- synchronous helpers (tests / examples) -----------------------
     def _run(self, gen):
@@ -241,6 +276,11 @@ class DB:
         # restart background machinery (placement monitor, migrator loop)
         be.start()
         tree._kick_background()
+        if self.metrics is not None:
+            # the sampler process died with the crash; gauges over the old
+            # tree are rebound to the recovered one, then sampling resumes
+            tree.install_metrics(self.metrics)
+            self.metrics.restart()
         self._crashed = False
         self.recovery = {"at": sim.now,
                          "live_wal_zones": len(be._wal_records),

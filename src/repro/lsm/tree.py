@@ -157,6 +157,40 @@ class LSMTree:
         n += sum(s.num_objs for lvl in self.levels for s in lvl)
         return n
 
+    def write_amplification(self) -> float:
+        """Device write bytes per user byte (WAL + flush + compaction +
+        migration traffic over ``puts * obj_size``) — the governing
+        backpressure quantity of the LSM design space."""
+        user = self.stats["puts"] * self.cfg.obj_size
+        if user <= 0:
+            return 0.0
+        dev = (self.backend.ssd.counters.write_bytes
+               + self.backend.hdd.counters.write_bytes)
+        return dev / user
+
+    # ------------------------------------------------------------------
+    # telemetry (repro.obs) — pull gauges over state the tree already
+    # maintains; the put/get/flush/compaction hot paths are untouched
+    # ------------------------------------------------------------------
+    def install_metrics(self, reg) -> None:
+        """Register the tree's signals on a ``MetricsRegistry``.  These are
+        the §3.1 hint quantities as continuous series: compaction debt and
+        L0 depth (compaction hints), flush backlog (flush hints), write
+        amplification and the delayed-write controller's rate.  Re-invoked
+        by ``DB.reopen()`` so the gauges rebind to the recovered tree."""
+        reg.gauge("lsm.debt", lambda: float(self.compaction_debt()))
+        reg.gauge("lsm.l0_files", lambda: float(len(self.levels[0])))
+        reg.gauge("lsm.flush_backlog",
+                  lambda: float(len(self.immutables) + len(self._flushing)))
+        reg.gauge("lsm.write_amp", self.write_amplification)
+        reg.gauge("lsm.delay_rate", lambda: self._delay_rate)
+        reg.gauge("lsm.write_stalls", lambda: self.stats["write_stalls"])
+        reg.gauge("lsm.block_cache_hit_rate", self.block_cache.hit_rate)
+        reg.collector(lambda: {
+            "lsm.compaction_rate": self.stats["compactions"],
+            "lsm.flush_rate": self.stats["flushes"],
+        }, rate=True, name="lsm.rates")
+
     # ==================================================================
     # write path
     # ==================================================================

@@ -1,0 +1,16 @@
+"""Observability + control subsystem for the HHZS reproduction.
+
+``metrics``  — virtual-time :class:`MetricsRegistry`: counters, pull
+gauges, dynamic collectors, windowed rates, and bounded ring-buffer time
+series sampled on the DES clock by a daemon process (zero hot-path
+overhead: every built-in signal is *pulled* at sample time).
+
+``control``  — :class:`ControlPlane`: closes the loop from telemetry to
+admission decisions — compaction debt as a third pressure signal and an
+AIMD feedback controller driving per-tenant token-bucket rates toward
+per-tenant p99 SLO targets.
+"""
+from .metrics import Counter, MetricsRegistry, TIMELINE_KIND
+from .control import ControlPlane
+
+__all__ = ["Counter", "MetricsRegistry", "TIMELINE_KIND", "ControlPlane"]

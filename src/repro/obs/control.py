@@ -1,0 +1,196 @@
+"""Compaction-debt control plane: telemetry-driven admission feedback.
+
+Closes the ROADMAP "smarter admission" item on top of the metrics bus.
+Two mechanisms, both keyed on signals the registry already samples:
+
+* **Debt pressure** — ``AdmissionConfig.debt_threshold`` makes compaction
+  debt (bytes of level overflow, the governing backpressure quantity of
+  LSM write amplification) a *third* admission pressure signal next to
+  WAL stalls and service backlog: the controller's ``debt_gauge`` is
+  consulted by ``AdmissionController.under_pressure()``, so the PR-2
+  ``reject``/``delay`` policies shed *before* the debt turns into write
+  stalls.  That wiring lives in the middleware; no ControlPlane needed.
+
+* **SLO feedback (this class)** — under policy ``"feedback"`` the
+  admission controller runs per-tenant token buckets whose rates are
+  *driven*, not configured: an AIMD loop compares each protected
+  tenant's measured sojourn p99 (observed by the multi-tenant runner on
+  every completion) against its ``TenantSpec.slo_p99`` target and
+  adjusts the non-protected tenants' bucket rates — multiplicative
+  decrease while any target is missed *or* compaction debt exceeds the
+  threshold, additive increase while every target has headroom.  The
+  loop is a daemon process on the DES clock: control actions happen in
+  virtual time, reproducibly.
+
+The plane also publishes its own signals into the registry (``ctl.*``:
+measured p99 per SLO tenant, targets, instantaneous attainment, the
+driven rates), so timeline artifacts show the feedback loop converging.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+
+class ControlPlane:
+    """AIMD feedback from measured per-tenant p99 to token-bucket rates.
+
+    ``ctrl`` is the run's ``AdmissionController`` (policy ``feedback``);
+    ``targets`` maps tenant name -> sojourn p99 target in virtual seconds
+    (from ``TenantSpec.slo_p99``).  Tenants in ``ctrl.cfg.protected`` are
+    never throttled — the plane drives every *other* tenant's rate.
+    Feedback constants live on ``AdmissionConfig`` (``feedback_*``) so a
+    scenario cell stays a single picklable spec.
+    """
+
+    def __init__(self, sim, ctrl, targets: Dict[str, float],
+                 debt_gauge: Optional[Callable[[], float]] = None,
+                 registry=None):
+        self.sim = sim
+        self.ctrl = ctrl
+        self.targets = {t: float(v) for t, v in targets.items() if v}
+        self.debt_gauge = debt_gauge
+        self._lat: Dict[str, deque] = {}
+        self._p99: Dict[str, float] = {}
+        # base rate per controlled tenant: anchors the additive step and
+        # the floor.  Configured finite rates anchor directly; an infinite
+        # (unconfigured) rate is anchored to the measured admit rate at
+        # the first decrease.
+        self._base: Dict[str, float] = {}
+        self._admitted_prev: Dict[str, float] = {}
+        self.adjustments = {"decrease": 0, "increase": 0, "hold": 0}
+        self._alive = True
+        if registry is not None:
+            self._install_metrics(registry)
+
+    @property
+    def cfg(self):
+        # read through to the controller: runners rebind ``ctrl.cfg``
+        # (e.g. to widen the protected set for one run)
+        return self.ctrl.cfg
+
+    # -- runner-facing hooks --------------------------------------------
+    def observe(self, tenant: str, latency: float) -> None:
+        """Record one completed op's sojourn (arrival -> done)."""
+        lat = self._lat.get(tenant)
+        if lat is None:
+            lat = self._lat[tenant] = deque(
+                maxlen=int(self.cfg.feedback_window))
+        lat.append(latency)
+
+    def start(self) -> None:
+        self.sim.process(self._loop())
+
+    def stop(self) -> None:
+        """Retire the daemon loop (runs are shorter-lived than the DB)."""
+        self._alive = False
+
+    def _loop(self):
+        while self._alive:
+            yield self.sim.timeout(self.cfg.feedback_interval, daemon=True)
+            if not self._alive:
+                return
+            self._tick()
+
+    # -- the controller --------------------------------------------------
+    def measured_p99(self, tenant: str) -> Optional[float]:
+        return self._p99.get(tenant)
+
+    def attainment(self) -> float:
+        """Fraction of SLO tenants currently meeting their target
+        (unmeasured tenants count as meeting it)."""
+        if not self.targets:
+            return 1.0
+        met = sum(1 for t, tgt in self.targets.items()
+                  if self._p99.get(t, 0.0) <= tgt)
+        return met / len(self.targets)
+
+    def debt_over(self) -> bool:
+        return (self.cfg.debt_threshold is not None
+                and self.debt_gauge is not None
+                and self.debt_gauge() > self.cfg.debt_threshold)
+
+    def _configured(self, tenant: str) -> float:
+        rates = self.cfg.bucket_rates or {}
+        rate, _ = rates.get(tenant,
+                            (self.cfg.bucket_rate, self.cfg.bucket_burst))
+        return float(rate)
+
+    def _measured_admit_rate(self, tenant: str) -> float:
+        c = self.ctrl.counters.get(tenant)
+        admitted = float(c["admitted"]) if c else 0.0
+        prev = self._admitted_prev.get(tenant, 0.0)
+        return max((admitted - prev) / self.cfg.feedback_interval, 1.0)
+
+    def _tick(self) -> None:
+        cfg = self.cfg
+        worst = 0.0                 # worst p99/target ratio across SLO tenants
+        for t, target in self.targets.items():
+            lat = self._lat.get(t)
+            if lat and len(lat) >= 8:
+                p99 = float(np.percentile(np.asarray(lat), 99))
+                self._p99[t] = p99
+                worst = max(worst, p99 / target)
+        # the rolling p99 lags by its window; the controller's *live*
+        # pressure signals (service backlog, WAL stalls, compaction debt
+        # over threshold) are instantaneous — react to either, so a burst
+        # is cut within one control period instead of one window
+        over = (worst > 1.0 or self.debt_over()
+                or self.ctrl.under_pressure())
+        protected = self.cfg.protected
+        controlled = [t for t in self.ctrl.counters if t not in protected]
+        for t in controlled:
+            cur = self.ctrl.rate_overrides.get(t)
+            if cur is None:
+                cur = self._configured(t)
+            if over:
+                # over target (or pressure building): multiplicative
+                # decrease
+                if not math.isfinite(cur):
+                    cur = self._measured_admit_rate(t)
+                base = self._base.setdefault(t, cur)
+                new = max(cur * cfg.feedback_decrease,
+                          cfg.feedback_floor * base)
+                self.adjustments["decrease"] += 1
+            elif worst < cfg.feedback_headroom and math.isfinite(cur):
+                # every target comfortably met (or not yet measurable):
+                # additive increase probes capacity back
+                base = self._base.setdefault(t, cur)
+                new = cur + cfg.feedback_increase * base
+                self.adjustments["increase"] += 1
+            else:
+                self.adjustments["hold"] += 1
+                new = cur
+            if math.isfinite(new):
+                self.ctrl.rate_overrides[t] = new
+        for t in self.ctrl.counters:
+            c = self.ctrl.counters[t]
+            self._admitted_prev[t] = float(c["admitted"])
+
+    # -- telemetry -------------------------------------------------------
+    def _install_metrics(self, reg) -> None:
+        for t, target in self.targets.items():
+            reg.gauge(f"ctl.p99.{t}",
+                      lambda t=t: self._p99.get(t, 0.0))
+            reg.gauge(f"ctl.target.{t}", lambda v=target: v)
+        reg.gauge("ctl.attainment", self.attainment)
+        reg.collector(lambda: {
+            f"ctl.rate.{t}": v
+            for t, v in self.ctrl.rate_overrides.items()
+            if math.isfinite(v)}, name="ctl.rates")
+
+    def summary(self) -> Dict[str, float]:
+        """JSON-ready controller accounting for result rows / debugging."""
+        out: Dict[str, float] = {
+            "decreases": self.adjustments["decrease"],
+            "increases": self.adjustments["increase"],
+        }
+        for t, v in self.ctrl.rate_overrides.items():
+            if math.isfinite(v):
+                out[f"rate.{t}"] = v
+        for t, p in self._p99.items():
+            out[f"p99.{t}"] = p
+        return out

@@ -273,12 +273,25 @@ class OpenLoopResult:
                         and ``mean_delay`` (virtual seconds); conservation:
                         ``arrived == admitted + rejected + holding``.
 
-    Fault-injection rows (``run_open_loop(faults=...)``) additionally carry:
+    Multi-tenant rows with an SLO target (``TenantSpec.slo_p99``) also
+    carry:
+
+    ``slo_p99``         the tenant's sojourn-p99 target (virtual seconds).
+    ``slo_met``         whether the measured p99 met the target.
+    ``goodput``         ops/s completing *within* the target over the busy
+                        span (== ``throughput`` for tenants without a
+                        target) — the SLO-attainment quantity
+                        ``bench_control`` compares policies on.
+
+    Fault-injection rows (``run_open_loop(faults=...)`` or
+    ``run_multi_tenant(faults=...)``) additionally carry:
 
     ``fault``           the ``FaultSpec.label`` schedule description.
     ``availability``    completed ops / offered ops — below 1.0 when a
                         crash killed in-flight ops or refused arrivals
-                        during the outage.
+                        during the outage.  On per-tenant rows the
+                        denominator excludes admission-shed ops (shedding
+                        is policy, not unavailability).
     ``stall_p``         sojourn percentiles over ops that *arrived inside a
                         stall window* (the during-stall tail), when the
                         spec has stall windows.
@@ -287,7 +300,14 @@ class OpenLoopResult:
                         virtual s), ``lost_in_flight`` (ops killed by the
                         crash), ``refused`` (arrivals during the outage),
                         plus ``DB.recovery``'s ``live_wal_zones`` /
-                        ``replayed_gens`` / ``replayed_records``.
+                        ``replayed_gens`` / ``replayed_records``; on
+                        per-tenant rows ``lost_in_flight``/``refused`` are
+                        this tenant's share.
+    ``recovery_slo_s`` / ``recovery_slo_met``
+                        recovery-time SLO accounting on crash rows, when
+                        the spec sets ``FaultSpec.recovery_slo_s``:
+                        the downtime budget and whether the measured
+                        downtime stayed within it.
     """
 
     name: str                      # workload name
@@ -313,11 +333,17 @@ class OpenLoopResult:
     policy: Optional[str] = None
     protected: Optional[bool] = None
     admission: Optional[Dict[str, float]] = None
-    # set only on fault-injection rows (run_open_loop(faults=...))
+    goodput: Optional[float] = None
+    slo_p99: Optional[float] = None
+    slo_met: Optional[bool] = None
+    # set only on fault-injection rows (run_open_loop(faults=...) and
+    # run_multi_tenant(faults=...))
     fault: Optional[str] = None
     availability: Optional[float] = None
     stall_p: Optional[Dict[str, float]] = None
     crash: Optional[Dict[str, float]] = None
+    recovery_slo_s: Optional[float] = None
+    recovery_slo_met: Optional[bool] = None
 
     def row(self) -> str:
         tag = ""
@@ -354,13 +380,19 @@ class OpenLoopResult:
         }
         if self.tenant is not None:
             d.update(tenant=self.tenant, policy=self.policy,
-                     protected=self.protected, admission=self.admission)
+                     protected=self.protected, admission=self.admission,
+                     goodput=self.goodput)
+            if self.slo_p99 is not None:
+                d.update(slo_p99=self.slo_p99, slo_met=self.slo_met)
         if self.fault is not None:
             d.update(fault=self.fault, availability=self.availability)
             if self.stall_p is not None:
                 d["stall_p"] = self.stall_p
             if self.crash is not None:
                 d["crash"] = self.crash
+            if self.recovery_slo_s is not None:
+                d.update(recovery_slo_s=self.recovery_slo_s,
+                         recovery_slo_met=self.recovery_slo_met)
         return d
 
 
@@ -515,6 +547,11 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
             fault_fields["stall_p"] = _pct(total[smask & measured])
         if crashing:
             fault_fields["crash"] = dict(crash_info)
+            if faults.recovery_slo_s is not None:
+                fault_fields["recovery_slo_s"] = faults.recovery_slo_s
+                fault_fields["recovery_slo_met"] = bool(
+                    crash_info.get("downtime", float("inf"))
+                    <= faults.recovery_slo_s)
     return OpenLoopResult(
         name=spec.name, scheme=db.scheme, arrival=arrival.name,
         n_arrived=n, n_measured=int(measured.sum()), duration=duration,
@@ -543,12 +580,17 @@ class TenantSpec:
     ``WorkloadSpec``; ``arrival`` is this tenant's own arrival process.
     ``protected`` marks the tenant exempt from admission-control
     shedding/delaying — the SLO tenant the policies exist to protect.
+    ``slo_p99`` is the tenant's sojourn-p99 target in virtual seconds: it
+    defines the row's ``goodput``/``slo_met`` columns and, on protected
+    tenants under policy ``feedback``, drives the SLO feedback controller
+    (``repro.obs.control.ControlPlane``).
     """
 
     name: str
     workload: Union[str, WorkloadSpec]
     arrival: ArrivalProcess
     protected: bool = False
+    slo_p99: Optional[float] = None
 
 
 @dataclass
@@ -582,7 +624,8 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
                      n_keys: int, *, warmup: float = 0.0,
                      max_concurrency: int = 64, seed: int = 1,
                      drain: bool = True,
-                     policy: Union[AdmissionConfig, str, None] = None
+                     policy: Union[AdmissionConfig, str, None] = None,
+                     faults: Optional[FaultSpec] = None
                      ) -> MultiTenantResult:
     """N tenants with independent arrival processes share one store.
 
@@ -597,6 +640,22 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
     delay.  ``policy`` (a policy name or full ``AdmissionConfig``)
     reconfigures ``db.admission`` for this run; tenants flagged
     ``protected`` are added to the controller's protected set.
+
+    Under policy ``"feedback"`` the run additionally spins up an SLO
+    feedback controller (``repro.obs.control.ControlPlane``): every
+    completion's sojourn is observed per tenant, and an AIMD daemon loop
+    drives the non-protected tenants' token-bucket rates toward the
+    protected tenants' ``TenantSpec.slo_p99`` targets (and away from
+    compaction debt above ``AdmissionConfig.debt_threshold``).
+
+    ``faults`` arms a :class:`repro.zoned.faults.FaultSpec` against the
+    run exactly as in ``run_open_loop``: stall/slow/zone-reset windows
+    perturb the devices under the unchanged engine, ``crash_at`` kills the
+    store mid-run (queued, in-flight and admission-held ops are lost,
+    arrivals during the outage are refused per tenant) and recovery
+    resumes the remaining merged arrival stream with a fresh server fleet.
+    Per-tenant rows then carry ``fault``/``availability``/``stall_p``/
+    ``crash`` columns (see :class:`OpenLoopResult`).
 
     Accounting mirrors ``run_open_loop`` per tenant (queueing vs service
     decomposition, warm-up exclusion, ``drain`` semantics); with one
@@ -617,12 +676,28 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
     # the next policy=None run must still see the constructor's config
     db.admission.base_cfg = orig_base
     ctrl = db.admission
+    # the third pressure signal: compaction debt (read through db.tree so
+    # the gauge survives a mid-run crash/reopen tree swap); consulted only
+    # when the policy sets a debt_threshold
+    ctrl.debt_gauge = lambda: float(db.tree.compaction_debt())
+    if getattr(db, "metrics", None) is not None:
+        ctrl.install_metrics(db.metrics)
     prot = frozenset(t.name for t in tenants if t.protected)
     if prot:
         # rebind (never mutate) the config: callers may share one
         # AdmissionConfig across runs/cells with different tenant mixes
         ctrl.cfg = replace(ctrl.cfg,
                            protected=frozenset(ctrl.cfg.protected) | prot)
+    control = None
+    if ctrl.cfg.policy == "feedback":
+        from ..obs.control import ControlPlane
+        control = ControlPlane(
+            sim, ctrl,
+            targets={t.name: t.slo_p99 for t in tenants
+                     if t.protected and t.slo_p99},
+            debt_gauge=ctrl.debt_gauge,
+            registry=getattr(db, "metrics", None))
+        control.start()
 
     specs = [YCSB[t.workload] if isinstance(t.workload, str) else t.workload
              for t in tenants]
@@ -649,12 +724,16 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
     arrive = [np.full(len(r), np.nan) for r in rels]
     start = [np.full(len(r), np.nan) for r in rels]
     done = [np.full(len(r), np.nan) for r in rels]
+    shed = [np.zeros(len(r), bool) for r in rels]   # admission-rejected
     queue: deque = deque()
     idle: List = []                       # events of parked servers
     depth = [0] * len(tenants)            # per-tenant ops in queue
     tmax_depth = [0] * len(tenants)
     state = {"closed": False, "max_depth": 0, "dispatched": False,
-             "holding": 0}
+             "holding": 0, "next": 0}
+    crash_info: Dict[str, float] = {}
+    lost_t = [0] * len(tenants)           # per-tenant crash accounting
+    refused_t = [0] * len(tenants)
     ctrl.queue_gauge = lambda: len(queue)
 
     def _enqueue(ti: int, i: int) -> None:
@@ -682,14 +761,19 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
         _maybe_close()
 
     def dispatcher():
-        for j in range(m):
+        # cursor-based (not `for j in range(m)`) so the post-crash
+        # respawn resumes the merged stream where the outage left it
+        while state["next"] < m:
+            j = state["next"]
             at = t0 + float(m_at[j])
             if at > sim.now:
                 yield at - sim.now   # bare-delay: no Event
             ti, i = int(m_ti[j]), int(m_i[j])
             arrive[ti][i] = sim.now
+            state["next"] = j + 1
             verdict = ctrl.decide(names[ti])
             if verdict == REJECT:
+                shed[ti][i] = True
                 continue
             if verdict == DELAY:
                 state["holding"] += 1
@@ -712,19 +796,76 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
             start[ti][i] = sim.now
             yield from streams[ti].execute(i)
             done[ti][i] = sim.now
+            if control is not None:
+                control.observe(names[ti], sim.now - arrive[ti][i])
+
+    def crash_ctl():
+        # mirrors run_open_loop's crash controller, with per-tenant
+        # accounting: everything queued, in flight, or admission-held dies
+        # with the store; arrivals during the outage are refused
+        at = t0 + faults.crash_at
+        if at > sim.now:
+            yield at - sim.now   # bare-delay: no Event
+        for ti in range(len(tenants)):
+            lost_t[ti] = int((~np.isnan(arrive[ti]) & ~shed[ti]
+                              & np.isnan(done[ti])).sum())
+        down0 = sim.now
+        db.crash()                 # kills dispatcher, servers, held ops
+        queue.clear()
+        idle.clear()
+        for ti in range(len(tenants)):
+            depth[ti] = 0
+        state["holding"] = 0       # held ops died with their processes
+        rec = yield from db.reopen_gen()
+        crash_info.update(rec)
+        crash_info["downtime"] = sim.now - down0
+        while state["next"] < m and \
+                t0 + float(m_at[state["next"]]) <= sim.now:
+            j = state["next"]
+            ti, i = int(m_ti[j]), int(m_i[j])
+            arrive[ti][i] = t0 + float(m_at[j])
+            state["next"] = j + 1
+            refused_t[ti] += 1
+        crash_info["lost_in_flight"] = sum(lost_t)
+        crash_info["refused"] = sum(refused_t)
+        # re-arm the not-yet-fired fault windows on the original schedule
+        FaultInjector(db, faults).arm(t0=t0, after=sim.now - t0)
+        if control is not None:
+            control.start()    # the AIMD loop died with the crash
+        for _ in range(max_concurrency):
+            db.submit(server())
+        db.submit(dispatcher())
 
     procs = [db.submit(server()) for _ in range(max_concurrency)]
     procs.append(db.submit(dispatcher()))
+    crashing = faults is not None and faults.crash_at is not None
+    if faults is not None:
+        FaultInjector(db, faults).arm()
+        if crashing:
+            sim.process(crash_ctl())
     if drain:
-        for p in procs:
-            sim.run_until(p)
+        if crashing:
+            # phase-1 processes die at the crash and their completion
+            # events never fire: drive to global quiescence instead
+            sim.run()
+        else:
+            for p in procs:
+                sim.run_until(p)
     else:
         # hard time limit (see run_open_loop): shed/held/queued ops that
         # did not complete are excluded from statistics below
         db.run_for(t0 + duration - sim.now)
     busy_span = max(sim.now - t0, 1e-12)
+    if crashing:
+        last = max((float(d[~np.isnan(d)].max())
+                    for d in done if (~np.isnan(d)).any()),
+                   default=sim.now)
+        # clamp to the last completion (see run_open_loop's crash path)
+        busy_span = max(last - t0, 1e-12)
     ctrl.queue_gauge = None   # this run's queue is dead; don't let later
     # DB.submit calls read pressure off it
+    if control is not None:
+        control.stop()        # retire the AIMD daemon loop with the run
 
     extras = collect_extras(db)
     results: List[OpenLoopResult] = []
@@ -736,13 +877,45 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
         qdel = st - arr
         serv = dn - st
         reads = (streams[ti].ops.codes == READ) & measured
+        throughput = float(completed.sum()) / busy_span
+        latency_p = _pct(total[measured])
+        # SLO-attainment columns: goodput counts only completions within
+        # the tenant's sojourn target (== throughput without a target)
+        slo_fields: Dict = {"goodput": throughput}
+        if t.slo_p99 is not None:
+            within = int((total[completed] <= t.slo_p99).sum())
+            slo_fields["goodput"] = within / busy_span
+            slo_fields["slo_p99"] = t.slo_p99
+            slo_fields["slo_met"] = bool(latency_p["p99"] <= t.slo_p99)
+        fault_fields: Dict = {}
+        if faults is not None:
+            fault_fields["fault"] = faults.label
+            served = len(arr) - int(shed[ti].sum())
+            fault_fields["availability"] = \
+                float(completed.sum()) / max(served, 1)
+            if faults.stalls:
+                smask = np.zeros(len(arr), bool)
+                for w in faults.stalls:
+                    smask |= ((arr >= t0 + w.at)
+                              & (arr < t0 + w.at + w.duration))
+                fault_fields["stall_p"] = _pct(total[smask & measured])
+            if crashing:
+                cd = dict(crash_info)
+                cd["lost_in_flight"] = lost_t[ti]
+                cd["refused"] = refused_t[ti]
+                fault_fields["crash"] = cd
+                if faults.recovery_slo_s is not None:
+                    fault_fields["recovery_slo_s"] = faults.recovery_slo_s
+                    fault_fields["recovery_slo_met"] = bool(
+                        crash_info.get("downtime", float("inf"))
+                        <= faults.recovery_slo_s)
         results.append(OpenLoopResult(
             name=specs[ti].name, scheme=db.scheme, arrival=t.arrival.name,
             n_arrived=len(arr), n_measured=int(measured.sum()),
             duration=duration,
             offered_rate=len(arr) / max(duration, 1e-12),
-            throughput=float(completed.sum()) / busy_span,
-            latency_p=_pct(total[measured]), queue_p=_pct(qdel[measured]),
+            throughput=throughput,
+            latency_p=latency_p, queue_p=_pct(qdel[measured]),
             service_p=_pct(serv[measured]),
             read_latency_p=_pct(total[reads]),
             mean_latency=_mean(total[measured]),
@@ -750,10 +923,11 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
             mean_service=_mean(serv[measured]),
             max_queue_depth=tmax_depth[ti],
             op_counts=dict(streams[ti].counts), extras=extras,
-            tenant=t.name, policy=ctrl.cfg.policy, protected=t.protected,
-            admission=ctrl.admission_summary(t.name)))
+            tenant=t.name, policy=ctrl.policy_label, protected=t.protected,
+            admission=ctrl.admission_summary(t.name),
+            **slo_fields, **fault_fields))
     return MultiTenantResult(
-        scheme=db.scheme, policy=ctrl.cfg.policy, duration=duration,
+        scheme=db.scheme, policy=ctrl.policy_label, duration=duration,
         n_arrived=m,
         n_completed=sum(int((~np.isnan(d)).sum()) for d in done),
         max_queue_depth=state["max_depth"], tenants=results, extras=extras)
@@ -784,23 +958,29 @@ class ScenarioCell:
 @dataclass(frozen=True)
 class MultiTenantCell:
     """One fully-resolved multi-tenant cell: a tenant mix under one
-    admission policy on one scheme/SSD budget."""
+    admission policy on one scheme/SSD budget (optionally with a fault
+    schedule armed against the run)."""
 
     scheme: str
     tenants: Tuple[TenantSpec, ...]
     policy: Union[str, AdmissionConfig]
     ssd_zones: int
+    fault: Optional[FaultSpec] = None
 
     @property
     def policy_name(self) -> str:
-        return (self.policy if isinstance(self.policy, str)
-                else self.policy.policy)
+        if isinstance(self.policy, str):
+            return self.policy
+        return self.policy.label or self.policy.policy
 
     @property
     def name(self) -> str:
         mix = "+".join(t.name for t in self.tenants)
-        return (f"{self.scheme}/mt[{mix}]/{self.policy_name}"
+        base = (f"{self.scheme}/mt[{mix}]/{self.policy_name}"
                 f"/z{self.ssd_zones}")
+        if self.fault is not None:
+            base += f"/f:{self.fault.name}"
+        return base
 
 
 @dataclass
@@ -824,12 +1004,19 @@ class ScenarioMatrix:
     (policy names or ``AdmissionConfig``s), emitting one row *per tenant*
     per cell.
 
-    Fault mode: ``faults`` sweeps single-stream cells across
-    ``FaultSpec``s (device stalls, bandwidth degradation, zone resets,
-    mid-run crash + recovery); ``None`` entries keep the undisturbed
-    baseline cell.  Fault rows carry ``fault``/``availability``/
-    ``stall_p``/``crash`` fields and are rendered by
+    Fault mode: ``faults`` sweeps cells across ``FaultSpec``s (device
+    stalls, bandwidth degradation, zone resets, mid-run crash +
+    recovery) — in single-stream *and* multi-tenant mode; ``None``
+    entries keep the undisturbed baseline cell.  Fault rows carry
+    ``fault``/``availability``/``stall_p``/``crash`` fields (per tenant
+    in multi-tenant mode) and are rendered by
     ``benchmarks.report.fault_recovery_table``.
+
+    Telemetry: ``telemetry=True`` (or a sample period) attaches the
+    ``repro.obs`` metrics bus to every cell's store; with
+    ``timeline_dir`` each cell dumps a timeline artifact
+    (``results/storage/timelines/*.json`` schema).  Telemetry is
+    pull-only and never changes a cell's rows.
     """
 
     schemes: Sequence[str]
@@ -847,9 +1034,15 @@ class ScenarioMatrix:
     db_factory: Optional[object] = None   # (scheme, ssd_zones) -> loaded db
     tenants: Sequence[Sequence[TenantSpec]] = ()
     policies: Sequence[Union[str, AdmissionConfig]] = ("none",)
-    # fault-injection sweep dimension for single-stream cells (ignored in
-    # multi-tenant mode); None = the undisturbed baseline cell
+    # fault-injection sweep dimension (single-stream AND multi-tenant
+    # cells); None = the undisturbed baseline cell
     faults: Sequence[Optional[FaultSpec]] = (None,)
+    # telemetry (repro.obs): True (or a sample period in virtual seconds)
+    # attaches a MetricsRegistry to every cell's store — pull-only, so
+    # rows stay byte-identical (asserted by CI grid-smoke); with
+    # timeline_dir each cell also dumps its timeline artifact there
+    telemetry: Union[bool, float] = False
+    timeline_dir: Optional[Union[str, Path]] = None
     results: List[OpenLoopResult] = field(default_factory=list)
 
     def _workload_spec(self, w) -> WorkloadSpec:
@@ -862,11 +1055,12 @@ class ScenarioMatrix:
 
     def cells(self) -> List[Union[ScenarioCell, MultiTenantCell]]:
         if self.tenants:
-            return [MultiTenantCell(s, tuple(mix), pol, z)
+            return [MultiTenantCell(s, tuple(mix), pol, z, f)
                     for s in self.schemes
                     for mix in self.tenants
                     for pol in self.policies
-                    for z in self.ssd_zone_budgets]
+                    for z in self.ssd_zone_budgets
+                    for f in self.faults]
         return [ScenarioCell(s, w, a, z, f)
                 for s in self.schemes
                 for w in map(self._workload_spec, self.workloads)
@@ -900,12 +1094,18 @@ class ScenarioMatrix:
         db = self._fresh_db(cell.scheme, cell.ssd_zones)
         n_keys = getattr(db, "n_keys",
                          db.scenario.paper_keys // self.key_div)
+        reg = None
+        if self.telemetry or self.timeline_dir is not None:
+            period = (float(self.telemetry)
+                      if not isinstance(self.telemetry, bool)
+                      and self.telemetry else 5.0)
+            reg = db.enable_telemetry(period)
         if isinstance(cell, MultiTenantCell):
             res = run_multi_tenant(
                 db, list(cell.tenants), self.duration, n_keys=n_keys,
                 warmup=self.warmup,
                 max_concurrency=self.max_concurrency,
-                seed=self.seed, policy=cell.policy)
+                seed=self.seed, policy=cell.policy, faults=cell.fault)
             per_cell = res.tenants
         else:
             per_cell = [run_open_loop(
@@ -913,6 +1113,14 @@ class ScenarioMatrix:
                 n_keys=n_keys, warmup=self.warmup,
                 max_concurrency=self.max_concurrency, seed=self.seed,
                 faults=cell.fault)]
+        if reg is not None:
+            reg.sample_now()        # close the series at end-of-run state
+            if self.timeline_dir is not None:
+                from ..obs.metrics import timeline_path
+                reg.dump_timeline(
+                    timeline_path(self.timeline_dir, cell.name),
+                    meta={"cell": cell.name, "scheme": cell.scheme,
+                          "ssd_zones": cell.ssd_zones})
         rows = []
         for r in per_cell:
             row = r.to_json()

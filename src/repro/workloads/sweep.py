@@ -294,8 +294,15 @@ def calibrated_arrivals(kinds: Sequence[str], workloads: Sequence[str],
 def build_grid(schemes: Sequence[str], workloads: Sequence[str],
                arrival_kinds: Sequence[str], budgets: Sequence[int],
                *, duration: float, warmup: float, key_div: int,
-               seed: int = 1, verbose: bool = False) -> ScenarioMatrix:
-    """The full-grid ScenarioMatrix the CLI (and CI smoke/nightly) runs."""
+               seed: int = 1, verbose: bool = False,
+               timelines: Optional[str] = None) -> ScenarioMatrix:
+    """The full-grid ScenarioMatrix the CLI (and CI smoke/nightly) runs.
+
+    ``timelines`` enables the per-cell telemetry bus (``repro.obs``) and
+    dumps one timeline artifact per cell into that directory — telemetry
+    is pull-only, so the published rows stay byte-identical with it on
+    (asserted by the CI grid-smoke telemetry leg).
+    """
     arrivals = calibrated_arrivals(arrival_kinds, workloads,
                                    key_div=key_div, ssd_zones=min(budgets),
                                    seed=seed, verbose=verbose)
@@ -303,7 +310,8 @@ def build_grid(schemes: Sequence[str], workloads: Sequence[str],
         schemes=list(schemes), workloads=list(workloads),
         arrivals=arrivals, ssd_zone_budgets=list(budgets),
         duration=duration, warmup=warmup, key_div=key_div, seed=seed,
-        db_factory=GridDBFactory(key_div=key_div))
+        db_factory=GridDBFactory(key_div=key_div),
+        telemetry=timelines is not None, timeline_dir=timelines)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -336,6 +344,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--out", default="results/storage/scenarios.json")
     ap.add_argument("--fresh", action="store_true",
                     help="re-run cells even if already present in --out")
+    ap.add_argument("--timelines", default=None, metavar="DIR",
+                    help="enable per-cell telemetry (repro.obs) and write "
+                         "one timeline artifact per cell into DIR; rows "
+                         "are unchanged")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -345,7 +357,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         [a for a in args.arrivals.split(",") if a],
         [int(b) for b in args.budgets.split(",") if b],
         duration=args.duration, warmup=args.warmup,
-        key_div=args.key_div, seed=args.seed)
+        key_div=args.key_div, seed=args.seed,
+        timelines=args.timelines)
 
     validate = None
     try:  # optional: schema linting before every write (CI installs it)

@@ -252,3 +252,42 @@ class ZonedDevice:
         if self.sim.now <= 0:
             return 0.0
         return self.counters.busy_time / self.sim.now
+
+    def queue_depth_s(self, background: bool = False) -> float:
+        """Seconds of service backlog on the (fore/back)ground track: how
+        long an I/O submitted now would wait before starting."""
+        until = self._bg_busy_until if background else self._busy_until
+        return max(0.0, until - self.sim.now)
+
+    def zone_occupancy(self) -> Dict[str, int]:
+        """Zone counts by state (single pass; EMPTY/OPEN/FULL)."""
+        empty = opened = full = 0
+        for z in self.zones:
+            s = z.state
+            if s is ZoneState.EMPTY:
+                empty += 1
+            elif s is ZoneState.OPEN:
+                opened += 1
+            else:
+                full += 1
+        return {"empty": empty, "open": opened, "full": full}
+
+    # ------------------------------------------------------------------
+    # telemetry (repro.obs) — pull gauges only: io() is untouched
+    # ------------------------------------------------------------------
+    def install_metrics(self, reg, prefix: Optional[str] = None) -> None:
+        """Register this device's per-tier signals on a ``MetricsRegistry``:
+        queue depth (fg/bg backlog seconds), utilization, zone occupancy by
+        state, and windowed read/write byte rates."""
+        p = prefix or self.name
+        reg.gauge(f"{p}.qdepth_s", self.queue_depth_s)
+        reg.gauge(f"{p}.bg_qdepth_s",
+                  lambda: self.queue_depth_s(background=True))
+        reg.gauge(f"{p}.util", self.utilization)
+        reg.collector(lambda: {
+            f"{p}.zones.{k}": float(v)
+            for k, v in self.zone_occupancy().items()})
+        reg.collector(lambda: {
+            f"{p}.read_rate": self.counters.read_bytes,
+            f"{p}.write_rate": self.counters.write_bytes,
+        }, rate=True)

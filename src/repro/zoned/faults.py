@@ -64,13 +64,20 @@ class ZoneReset:
 
 @dataclass(frozen=True)
 class FaultSpec:
-    """Declarative fault schedule for one run (times relative to run start)."""
+    """Declarative fault schedule for one run (times relative to run start).
+
+    ``recovery_slo_s`` is a recovery-time SLO budget for the crash point:
+    runs report ``recovery_slo_s``/``recovery_slo_met`` columns comparing
+    the measured downtime (crash → serving again, WAL replay included)
+    against it.
+    """
 
     name: str = "faults"
     crash_at: Optional[float] = None
     stalls: Tuple[StallWindow, ...] = ()
     slows: Tuple[SlowWindow, ...] = ()
     zone_resets: Tuple[ZoneReset, ...] = ()
+    recovery_slo_s: Optional[float] = None
 
     @property
     def label(self) -> str:

@@ -43,6 +43,8 @@ Hot-path design (benchmarked by ``benchmarks/sim_speed.py``):
 """
 from __future__ import annotations
 
+import numbers
+
 from heapq import heapify, heappop, heappush
 from typing import Any, Callable, Generator, Iterable, List, Optional
 
@@ -103,8 +105,11 @@ class Process(Event):
     """Drives a generator; the Process itself is an Event that fires on return.
 
     A process yields either an :class:`Event` to wait on, or a bare
-    ``float``/``int`` delay — sugar for ``timeout(delay)`` that skips the
-    Event allocation entirely (the kernel resumes the generator directly).
+    real-number delay — sugar for ``timeout(delay)`` that skips the Event
+    allocation entirely (the kernel resumes the generator directly).
+    ``float``/``int`` take the fast path; any other ``numbers.Real``
+    (numpy scalars like ``np.float64(0.25)``) is accepted via a
+    conversion fallback.
     """
 
     __slots__ = ("gen", "_send", "_bound_step")
@@ -183,7 +188,30 @@ class Process(Event):
         if isinstance(ev, Event):   # Event subclass (e.g. joining a Process)
             ev.add_callback(self._bound_step)
             return
-        raise TypeError(f"process yielded non-event: {ev!r}")
+        if isinstance(ev, numbers.Real):
+            # any real number is a bare delay: numpy scalars
+            # (np.float64(0.25), np.int64(1)) and other Real duck-types
+            # are not `float`/`int` exactly, so they miss the fast path
+            # above — convert once and take the same no-Event schedule
+            delay = float(ev)
+            if delay < 0:
+                raise ValueError(f"negative delay {delay}")
+            sim = self.sim
+            at = sim.now + delay
+            sim._seq += 1
+            sim._live += 1
+            rq = sim._rq
+            if rq._q and at < rq._last:
+                heappush(sim._heap,
+                         (at, sim._seq, False, self._bound_step, None))
+            else:
+                rq._q.append((at, sim._seq, self._bound_step, None))
+                rq._last = at
+            return
+        raise TypeError(
+            f"process yielded non-event: {ev!r} — yield an Event, a device "
+            f"completion ticket, or a real-number delay (float/int/numpy "
+            f"scalar)")
 
 
 class Sim:

@@ -1,0 +1,401 @@
+"""Telemetry bus (repro.obs) + compaction-debt control plane.
+
+Covers the registry primitives (counters, gauges, collectors, windowed
+rates, bounded ring buffers, the daemon sampler), the layer
+instrumentation wired by ``DB.enable_telemetry``, the two contracts the
+subsystem ships with — telemetry-on runs are *event-for-event identical*
+to telemetry-off runs, and the timeline artifact validates against the
+schema linter — and the ControlPlane's AIMD feedback (including the
+acceptance shape: feedback beats a static token bucket on protected-tenant
+p99 at equal-or-better total goodput).
+"""
+import importlib.util
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from repro.core.middleware import AdmissionConfig, AdmissionController
+from repro.lsm import DB
+from repro.obs import ControlPlane, MetricsRegistry
+from repro.workloads import (PoissonArrivals, ScenarioMatrix, TenantSpec,
+                             WorkloadSpec, YCSB, run_load, run_multi_tenant,
+                             run_open_loop)
+from repro.zoned import Sim
+
+
+def _load_validator():
+    """Load benchmarks/validate_results.py by path (the benchmarks dir is
+    a namespace package only importable from the repo root)."""
+    p = Path(__file__).resolve().parent.parent / "benchmarks" \
+        / "validate_results.py"
+    spec = importlib.util.spec_from_file_location("_validate_results", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _loaded(scheme="HHZS", n=1200, **db_kw):
+    db = DB(scheme, tiny_scenario(), store_values=True, **db_kw)
+    run_load(db, n_keys=n)
+    db.flush_all()
+    return db, n
+
+
+# ---------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------
+def test_counter_gauge_and_series():
+    sim = Sim()
+    reg = MetricsRegistry(sim, sample_period=1.0)
+    c = reg.counter("ops")
+    state = {"v": 10.0}
+    reg.gauge("depth", lambda: state["v"])
+    c.add(3)
+    reg.sample_now()
+    c.add(2)
+    state["v"] = 7.0
+    sim.timeout(1.0)
+    sim.run()
+    reg.sample_now()
+    assert reg.times() == [0.0, 1.0]
+    assert reg.series("ops") == [3.0, 5.0]
+    assert reg.series("depth") == [10.0, 7.0]
+    assert reg.latest("depth") == 7.0
+    assert reg.latest("nonexistent") is None
+
+
+def test_ring_buffer_bounded_and_ordered():
+    sim = Sim()
+    reg = MetricsRegistry(sim, sample_period=1.0, capacity=4)
+    reg.gauge("t2", lambda: 2 * sim.now)
+    for k in range(10):
+        sim.timeout(1.0)
+        sim.run()
+        reg.sample_now()
+    ts = reg.times()
+    assert len(ts) == 4 and ts == [7.0, 8.0, 9.0, 10.0]   # oldest dropped
+    assert reg.series("t2") == [14.0, 16.0, 18.0, 20.0]
+    assert reg.latest("t2") == 20.0
+
+
+def test_windowed_rate_collector():
+    sim = Sim()
+    reg = MetricsRegistry(sim, sample_period=1.0)
+    total = {"n": 0.0}
+    reg.collector(lambda: {"arr.rate": total["n"]}, rate=True)
+    reg.sample_now()                 # first sample: no previous -> 0
+    total["n"] = 50.0
+    sim.timeout(2.0)
+    sim.run()
+    reg.sample_now()                 # 50 in 2s -> 25/s
+    total["n"] = 50.0
+    sim.timeout(2.0)
+    sim.run()
+    reg.sample_now()                 # no growth -> 0/s
+    assert reg.series("arr.rate") == [0.0, 25.0, 0.0]
+
+
+def test_named_collector_rebinds():
+    sim = Sim()
+    reg = MetricsRegistry(sim, sample_period=1.0)
+    reg.collector(lambda: {"x": 1.0}, name="src")
+    reg.sample_now()
+    reg.collector(lambda: {"x": 9.0}, name="src")   # replaces, not appends
+    reg.sample_now()
+    assert reg.series("x") == [1.0, 9.0]
+
+
+def test_sampler_is_daemon_and_late_series_pad():
+    sim = Sim()
+    reg = MetricsRegistry(sim, sample_period=1.0)
+    reg.gauge("a", lambda: 1.0)
+    reg.start()
+    sim.timeout(3.0)                 # the only non-daemon work
+    sim.run()
+    # the sampler never keeps the run alive
+    assert sim.now == 3.0
+    n0 = reg.samples
+    assert n0 >= 2
+    # a series registered late is None-padded for earlier samples
+    reg.gauge("b", lambda: 5.0)
+    reg.sample_now()
+    sb = reg.series("b")
+    assert sb[-1] == 5.0 and all(v is None for v in sb[:-1])
+
+
+def test_registry_rejects_bad_config():
+    sim = Sim()
+    with pytest.raises(ValueError):
+        MetricsRegistry(sim, sample_period=0.0)
+    with pytest.raises(ValueError):
+        MetricsRegistry(sim, capacity=0)
+
+
+# ---------------------------------------------------------------------
+# layer instrumentation (DB.enable_telemetry)
+# ---------------------------------------------------------------------
+def test_enable_telemetry_signals_plausible():
+    db, n = _loaded(telemetry=2.0)
+    res = run_open_loop(db, YCSB["A"], PoissonArrivals(8.0), duration=60.0,
+                        n_keys=n, warmup=5.0, max_concurrency=8)
+    reg = db.metrics
+    reg.sample_now()
+    assert res.n_measured > 0 and reg.samples > 10
+    names = set(reg.names())
+    for required in ("ssd.qdepth_s", "ssd.util", "ssd.zones.empty",
+                     "ssd.zones.open", "ssd.zones.full", "hdd.util",
+                     "lsm.debt", "lsm.l0_files", "lsm.flush_backlog",
+                     "lsm.write_amp", "mw.wal_pressure", "mw.wal_zones",
+                     "adm.pressure", "ssd.write_rate"):
+        assert required in names, f"missing signal {required}"
+    # value sanity on the final sample
+    assert 0.0 <= reg.latest("ssd.util") <= 1.0
+    assert reg.latest("lsm.debt") >= 0.0
+    assert reg.latest("lsm.write_amp") > 1.0      # flush+compaction > user
+    occ = (reg.latest("ssd.zones.empty") + reg.latest("ssd.zones.open")
+           + reg.latest("ssd.zones.full"))
+    assert occ == len(db.ssd.zones)
+    assert db.enable_telemetry() is reg           # idempotent
+
+
+def test_telemetry_identical_rows_open_loop():
+    """The satellite contract: a registry-on run publishes exactly the
+    rows a registry-off run does — sampling is pull-only and daemon-only,
+    so the virtual-time history cannot change."""
+    rows = []
+    for telemetry in (False, True):
+        db, n = _loaded(telemetry=telemetry)
+        res = run_open_loop(db, YCSB["A"], PoissonArrivals(10.0),
+                            duration=90.0, n_keys=n, warmup=10.0,
+                            max_concurrency=8, seed=9)
+        rows.append(res.to_json())
+    assert rows[0] == rows[1]
+
+
+def test_telemetry_identical_rows_multi_tenant():
+    rows = []
+    mix = [TenantSpec("a", YCSB["A"], PoissonArrivals(4.0), protected=True),
+           TenantSpec("b", YCSB["C"], PoissonArrivals(6.0))]
+    for telemetry in (False, True):
+        db, n = _loaded("B3", telemetry=telemetry)
+        res = run_multi_tenant(
+            db, mix, duration=90.0, n_keys=n, warmup=10.0,
+            max_concurrency=8,
+            policy=AdmissionConfig(policy="reject", queue_threshold=16))
+        rows.append([t.to_json() for t in res.tenants])
+    assert rows[0] == rows[1]
+
+
+def test_telemetry_survives_crash_reopen():
+    db, n = _loaded(telemetry=1.0)
+    db.run_for(5.0)
+    before = db.metrics.samples
+    db.crash()
+    db.reopen()
+    db.run_for(10.0)
+    db.sim.timeout(10.0)
+    db.drain()
+    assert db.metrics.samples > before, "sampler must resume after reopen"
+    # gauges rebound to the recovered tree: sampling still works
+    db.metrics.sample_now()
+    assert db.metrics.latest("lsm.debt") is not None
+    # regression: the tree's rate collector must REBIND on reopen (named
+    # registration), not duplicate — a stale collector over the dead tree
+    # stamps _prev first each sample, zeroing the live one's deltas
+    flushes0 = db.tree.stats["flushes"]
+    for k in range(400):
+        db.put(k + 10_000_000)
+    db.flush_all()
+    db.run_for(2.0)
+    db.metrics.sample_now()
+    assert db.tree.stats["flushes"] > flushes0
+    post = [v for v in db.metrics.series("lsm.flush_rate") if v]
+    assert post, "post-recovery flushes must show up in the rate series"
+
+
+# ---------------------------------------------------------------------
+# timeline artifacts
+# ---------------------------------------------------------------------
+def test_matrix_timeline_artifact_validates(tmp_path):
+    def db_factory(scheme, ssd_zones):
+        db = DB(scheme, tiny_scenario(ssd_zones=ssd_zones),
+                store_values=True)
+        run_load(db, n_keys=800)
+        db.flush_all()
+        db.n_keys = 800
+        return db
+
+    spec = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
+    kw = dict(schemes=["B3"], workloads=[spec],
+              arrivals=[PoissonArrivals(6.0)], ssd_zone_budgets=[20],
+              duration=60.0, warmup=5.0, max_concurrency=8,
+              db_factory=db_factory)
+    plain = ScenarioMatrix(**kw).run(verbose=False)
+    tl_dir = tmp_path / "timelines"
+    instrumented = ScenarioMatrix(**kw, telemetry=2.0,
+                                  timeline_dir=tl_dir).run(verbose=False)
+    # byte-identical rows with the bus on (the grid-smoke CI contract)
+    assert plain == instrumented
+    files = list(tl_dir.glob("*.json"))
+    assert len(files) == 1
+    import json
+    tl = json.loads(files[0].read_text())
+    v = _load_validator()
+    assert v.validate_timeline(tl, str(files[0])) == []
+    assert v.validate_file(files[0]) == []        # CLI dispatch path
+    assert tl["meta"]["cell"] == "B3/mix/poisson(6)/z20"
+    assert len(tl["t"]) >= 10
+    assert "lsm.debt" in tl["series"]
+    # a malformed timeline is rejected
+    bad = dict(tl, t=tl["t"][:-1])
+    assert v.validate_timeline(bad, "bad") != []
+
+
+# ---------------------------------------------------------------------
+# control plane: debt pressure + AIMD feedback
+# ---------------------------------------------------------------------
+def test_debt_threshold_is_third_pressure_signal():
+    sim = Sim()
+    ctrl = AdmissionController(
+        sim, None, AdmissionConfig(policy="reject", debt_threshold=100.0))
+    debt = {"v": 0.0}
+    ctrl.debt_gauge = lambda: debt["v"]
+    assert not ctrl.under_pressure()
+    debt["v"] = 101.0
+    assert ctrl.under_pressure()
+    assert ctrl.decide("t") == "reject"
+    debt["v"] = 0.0
+    assert ctrl.decide("t") == "admit"
+    # without a threshold the gauge is ignored
+    ctrl2 = AdmissionController(sim, None, AdmissionConfig(policy="reject"))
+    ctrl2.debt_gauge = lambda: 1e18
+    assert not ctrl2.under_pressure()
+
+
+def test_control_plane_aimd_decrease_and_increase():
+    sim = Sim()
+    cfg = AdmissionConfig(policy="feedback", protected=frozenset(["a"]),
+                          bucket_rates={"b": (100.0, 5.0)},
+                          feedback_decrease=0.5, feedback_increase=0.1,
+                          feedback_headroom=0.8, feedback_floor=0.05)
+    ctrl = AdmissionController(sim, None, cfg)
+    ctrl.tenant_counters("a")
+    ctrl.tenant_counters("b")
+    plane = ControlPlane(sim, ctrl, targets={"a": 0.1})
+    # over target: multiplicative decrease of the non-protected tenant
+    for _ in range(16):
+        plane.observe("a", 1.0)
+    plane._tick()
+    assert ctrl.rate_overrides["b"] == pytest.approx(50.0)
+    plane._tick()
+    assert ctrl.rate_overrides["b"] == pytest.approx(25.0)
+    # floor: never below feedback_floor * base
+    for _ in range(20):
+        plane._tick()
+    assert ctrl.rate_overrides["b"] >= 0.05 * 100.0 - 1e-9
+    # back under target with headroom: additive increase (0.1 * base)
+    plane._lat["a"].clear()
+    for _ in range(16):
+        plane.observe("a", 0.01)
+    before = ctrl.rate_overrides["b"]
+    plane._tick()
+    assert ctrl.rate_overrides["b"] == pytest.approx(before + 10.0)
+    # protected tenants are never throttled
+    assert "a" not in ctrl.rate_overrides
+    assert plane.attainment() == 1.0
+
+
+def test_control_plane_debt_override_forces_decrease():
+    sim = Sim()
+    cfg = AdmissionConfig(policy="feedback", protected=frozenset(["a"]),
+                          bucket_rates={"b": (100.0, 5.0)},
+                          debt_threshold=1000.0, feedback_decrease=0.5)
+    ctrl = AdmissionController(sim, None, cfg)
+    ctrl.tenant_counters("b")
+    plane = ControlPlane(sim, ctrl, targets={"a": 0.1},
+                         debt_gauge=lambda: 5000.0)
+    # no latency measurements at all, but debt above threshold: decrease
+    plane._tick()
+    assert ctrl.rate_overrides["b"] == pytest.approx(50.0)
+    assert plane.debt_over()
+
+
+def test_feedback_policy_rejects_when_bucket_empty():
+    db = DB("HHZS", tiny_scenario(), store_values=True,
+            admission=AdmissionConfig(policy="feedback",
+                                      bucket_rates={"t": (0.001, 1.0)}))
+
+    def op():
+        yield db.sim.timeout(0.01)
+
+    assert db.submit(op(), tenant="t") is not None
+    assert db.submit(op(), tenant="t") is None      # shed like token_bucket
+    db.drain()
+    c = db.admission.tenant_counters("t")
+    assert c["arrived"] == 2 and c["rejected"] == 1
+    # the live override is consulted before the configured rate
+    db.admission.rate_overrides["t"] = float("inf")
+    assert db.submit(op(), tenant="t") is not None
+    db.drain()
+
+
+def test_feedback_beats_static_bucket_on_protected_p99():
+    """The bench_control acceptance shape at test scale: under an
+    overloading neighbour, the feedback policy yields a lower
+    protected-tenant p99 than the same token bucket left static, at
+    equal-or-better total goodput (ops within SLO).
+
+    Sizing: the tiny store serves reads at ~2.5 ops/s closed-loop and the
+    light-load sojourn p99 of YCSB A is ~2s (compaction-stall excursions),
+    so bulk reads at 8/s are a genuine sustained overload and a 5s
+    protected target is feasible once the neighbour is throttled — but
+    hopeless behind the static bucket's unbounded queue."""
+    mix = [TenantSpec("prot", YCSB["A"], PoissonArrivals(2.0),
+                      protected=True, slo_p99=5.0),
+           TenantSpec("bulk", YCSB["C"], PoissonArrivals(8.0),
+                      slo_p99=10.0)]
+    results = {}
+    for policy in ("token_bucket", "feedback"):
+        db, n = _loaded("B3")
+        cfg = AdmissionConfig(policy=policy,
+                              bucket_rates={"bulk": (8.0, 5.0)},
+                              feedback_interval=2.0)
+        results[policy] = run_multi_tenant(
+            db, mix, duration=300.0, n_keys=n, warmup=30.0,
+            max_concurrency=8, policy=cfg)
+    p99 = {p: r.by_tenant("prot").latency_p["p99"]
+           for p, r in results.items()}
+    goodput = {p: sum(t.goodput for t in r.tenants)
+               for p, r in results.items()}
+    assert p99["feedback"] < p99["token_bucket"], (p99, goodput)
+    assert goodput["feedback"] >= goodput["token_bucket"], (p99, goodput)
+    # rows carry the SLO columns and validate against the schema
+    rows = []
+    for r in results["feedback"].tenants:
+        row = r.to_json()
+        row["cell"] = "t/feedback"
+        row["ssd_zones"] = 20
+        rows.append(row)
+    assert rows[0]["slo_p99"] == 5.0 and "slo_met" in rows[0]
+    assert _load_validator().validate_rows(rows) == []
+
+
+# ---------------------------------------------------------------------
+# overhead: the sim_speed gate with the kernel under an instrumented repo
+# ---------------------------------------------------------------------
+@pytest.mark.slow
+def test_sim_speed_gate_holds_with_instrumentation_live():
+    """The registry is pull-only, so the DES kernel hot paths are exactly
+    as fast as before the telemetry subsystem landed: the geomean speedup
+    vs the frozen seed kernel must stay above the CI canary floor."""
+    root = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root))
+    try:
+        from benchmarks.sim_speed import run as sim_speed_run
+        rows, geomean = sim_speed_run(repeat=2, scale=1)
+    finally:
+        sys.path.remove(str(root))
+    assert geomean >= 1.55, rows

@@ -283,6 +283,39 @@ def test_bare_delay_negative_raises():
         sim.run_until(sim.process(proc()))
 
 
+def test_numpy_scalar_bare_delay_yields():
+    """Regression: ``yield np.float64(0.25)`` raised TypeError — numpy
+    scalars are not exactly ``float``/``int``, so they missed the bare-
+    delay fast path.  Any ``numbers.Real`` is now accepted (converted
+    once, same schedule); non-real yields fail with a pointed message."""
+    import numpy as np
+    sim = Sim()
+    marks = []
+
+    def proc():
+        yield np.float64(0.25)
+        marks.append(sim.now)
+        yield np.int64(1)
+        marks.append(sim.now)
+        yield np.float32(0.5)
+        marks.append(sim.now)
+
+    sim.run_until(sim.process(proc()))
+    assert marks == [0.25, 1.25, 1.75]
+
+    def negative():
+        yield np.float64(-0.5)
+
+    with pytest.raises(ValueError, match="negative delay"):
+        sim.run_until(sim.process(negative()))
+
+    def not_a_delay():
+        yield "0.25"
+
+    with pytest.raises(TypeError, match="real-number delay"):
+        sim.run_until(sim.process(not_a_delay()))
+
+
 def test_run_until_with_device_queue_and_until_clamp():
     """run(until=...) stops on time with completions still pending in a
     device queue, then finishes them on the next run()."""
