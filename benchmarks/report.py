@@ -106,6 +106,10 @@ def storage_tables() -> str:
     if sc:
         out.append("### scenario matrix (open-loop)")
         out.append(sc)
+    ft = filter_sweep_table()
+    if ft:
+        out.append("### Bloom filter-bits sweep (batched read path)")
+        out.append(ft)
     mt = tenant_tail_table()
     if mt:
         out.append("### multi-tenant admission control (per-tenant tails)")
@@ -133,9 +137,12 @@ def _scenario_rows():
 
 def _grid_rows():
     """Single-stream rows of the full-grid sweep (YCSB letter workloads,
-    written by ``python -m repro.workloads.sweep``)."""
+    written by ``python -m repro.workloads.sweep``).  Filter-sweep rows
+    (``bench_filter_sweep``) also use YCSB C but carry a ``filter_bits``
+    column and render in their own pivot."""
     return [r for r in _scenario_rows()
             if "tenant" not in r and "fault" not in r
+            and "filter_bits" not in r
             and r.get("workload") in set("ABCDEF")]
 
 
@@ -223,7 +230,7 @@ def scenario_matrix_table() -> str:
             "|---|---|---|---|---|---|---|---|"]
     found = False
     for r in _scenario_rows():
-        if "tenant" in r or "fault" in r \
+        if "tenant" in r or "fault" in r or "filter_bits" in r \
                 or r.get("workload") in set("ABCDEF"):
             continue
         found = True
@@ -265,6 +272,39 @@ def tenant_tail_table() -> str:
             f"| {r['service_p']['p99']*1e3:.1f} "
             f"| {r['latency_p']['p999']*1e3:.1f} |")
     return "\n".join(rows) if found else ""
+
+
+def filter_sweep_table() -> str:
+    """Bloom filter-bits x scheme pivot from the ``bench_filter_sweep``
+    rows (scenarios.json rows carrying ``filter_bits``): each entry is
+    throughput ops/s and the measured FP rate per probe
+    (``bloom_fp / filter_probes`` from the row extras) — the
+    accuracy-vs-memory trade the batched read path exposes as a sweep
+    axis."""
+    rows = [r for r in _scenario_rows()
+            if "filter_bits" in r and "tenant" not in r and "fault" not in r]
+    if not rows:
+        return ""
+    cells = {}
+    for r in rows:
+        probes = r["extras"].get("filter_probes", 0)
+        fp = r["extras"].get("bloom_fp", 0) / probes if probes else 0.0
+        cells[(r["scheme"], int(r["filter_bits"]))] = (r["throughput"], fp)
+    schemes = _scheme_order({s for s, _ in cells})
+    bits = sorted({b for _, b in cells})
+    out = ["(entries: throughput ops/s / measured FP per probe)",
+           "| scheme | " + " | ".join(f"{b} bits" for b in bits) + " |",
+           "|---" * (len(bits) + 1) + "|"]
+    for s in schemes:
+        vals = []
+        for b in bits:
+            if (s, b) in cells:
+                t, fp = cells[(s, b)]
+                vals.append(f"{t:.1f} / {fp:.4f}")
+            else:
+                vals.append("—")
+        out.append(f"| {s} | " + " | ".join(vals) + " |")
+    return "\n".join(out)
 
 
 def fault_recovery_table() -> str:

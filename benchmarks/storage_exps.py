@@ -326,6 +326,53 @@ def bench_scenarios() -> List[str]:
     return rows
 
 
+def bench_filter_sweep() -> List[str]:
+    """Bloom filter-bits sweep (the batched-read-path axis): YCSB C
+    open-loop cells at ``filter_bits_per_key`` in (4, 8, 10, 16) for
+    B3 and HHZS, batched gets on (``read_batch=16``).  Each row carries a
+    ``filter_bits`` column plus the ``filter_probes``/``bloom_fp`` extras,
+    so FP-rate-per-probe x throughput renders as
+    ``benchmarks/report.filter_sweep_table``.  Rows publish to
+    ``results/storage/filters.json`` and merge into scenarios.json
+    (replacing exactly the previous filter-sweep rows)."""
+    from repro.workloads import PoissonArrivals, ScenarioMatrix
+    from repro.workloads.sweep import GridDBFactory, run_sweep
+
+    factory = GridDBFactory(key_div=KEY_DIV, load_div=8)
+    # closed-loop probe anchors the offered rate (see bench_scenarios)
+    probe = factory("B3", 20)
+    spec = YCSB["C"]
+    pr = run_workload(probe, spec, n_ops=2000, n_keys=probe.n_keys)
+    svc = max(pr.throughput, 1e-6)
+    matrix = ScenarioMatrix(
+        schemes=["B3", "HHZS"],
+        workloads=[spec],
+        arrivals=[PoissonArrivals(0.5 * svc)],
+        ssd_zone_budgets=[20],
+        filter_bits=[4, 8, 10, 16],
+        read_batch=16,
+        duration=600.0, warmup=60.0,
+        key_div=KEY_DIV, db_factory=factory)
+    data = run_sweep(matrix, out=None, workers=2, resume=False,
+                     verbose=False)
+    _merge_scenarios(data, replaces=lambda r: "filter_bits" in r)
+    from benchmarks.validate_results import validate_rows
+    validate_rows(data, "filters.json", strict=True)
+    (RESULTS / "filters.json").write_text(json.dumps(data, indent=1))
+    rows = []
+    for r in data:
+        probes = r["extras"].get("filter_probes", 0)
+        fps = r["extras"].get("bloom_fp", 0)
+        rows.append(_row(
+            f"filters_{r['cell']}",
+            r["latency_p"]["p99"] * 1e6,
+            f"bits={r['filter_bits']}"
+            f";thpt={r['throughput']:.1f}/s"
+            f";fp_per_probe={fps / probes if probes else 0.0:.4f}"
+            f";hdd_rd_mb={r['extras'].get('hdd_read_bytes', 0)/MiB:.1f}"))
+    return rows
+
+
 def bench_multitenant() -> List[str]:
     """Multi-tenant SLO experiment: a protected steady tenant shares each
     store with a flash-crowd tenant, under admission policies none /
@@ -614,6 +661,7 @@ ALL = {
     "exp5": bench_exp5,
     "exp6": bench_exp6,
     "scenarios": bench_scenarios,
+    "filters": bench_filter_sweep,
     "multitenant": bench_multitenant,
     "faults": bench_faults,
     "control": bench_control,

@@ -252,7 +252,7 @@ def validate_file(path: Path) -> List[str]:
 
 
 DEFAULT_TARGETS = ("scenarios.json", "multitenant.json", "faults.json",
-                   "control.json")
+                   "control.json", "filters.json")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:

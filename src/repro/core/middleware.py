@@ -241,8 +241,12 @@ class HybridZonedBackend:
 
     # ------------------------------------------------------------------
     def read_block(self, sst: "SST", block_idx: int):
-        """Generator: read one data block; SSD cache zones checked first."""
-        sst.num_reads += 1
+        """Generator: read one data block; SSD cache zones checked first.
+
+        Charges device I/O only — logical-read accounting (``num_reads``,
+        the §3.4 popularity signal) lives in the tree's read path so that
+        block-cache *hits* count too; counting only here made fully
+        cache-resident hot SSTs look cold to the migrator."""
         if sst.tier == HDD and self.cache is not None \
                 and self.cache.lookup(sst.sid, block_idx):
             self.cache.record_hit()

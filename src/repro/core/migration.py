@@ -68,11 +68,18 @@ class Migrator:
                 yield be.sim.timeout(self.tick, daemon=True)
                 continue
             sst, dst, swap_victim = job
+            moved = False
             if swap_victim is not None:
                 ok = yield from self._migrate(swap_victim, "hdd")
                 if ok:
                     self.swaps += 1
-            yield from self._migrate(sst, dst)
+                    moved = True
+            ok = yield from self._migrate(sst, dst)
+            if not (ok or moved):
+                # the picked job made no progress (preempted, no zones):
+                # re-picking immediately would spin without advancing
+                # virtual time, so back off one tick
+                yield be.sim.timeout(self.tick, daemon=True)
 
     # ------------------------------------------------------------------
     def _unlocked(self, ssts: List["SST"]) -> List["SST"]:
@@ -84,9 +91,10 @@ class Migrator:
         if self.basic_low_levels is None:
             # --- capacity migration (HHZS mode only) ----------------------
             t = be.placement.tiering_level()
-            ssd_ssts = self._unlocked(be.ssd_ssts())
-            at_t = [s for s in be.ssd_ssts() if s.level == t]
-            over_t = [s for s in be.ssd_ssts() if s.level > t]
+            all_ssd = be.ssd_ssts()
+            ssd_ssts = self._unlocked(all_ssd)
+            at_t = [s for s in all_ssd if s.level == t]
+            over_t = [s for s in all_ssd if s.level > t]
             reserved_t = be.placement.reserved_for_tiering(t) \
                 if hasattr(be.placement, "reserved_for_tiering") else float("inf")
             # evict only when lower levels actually lack zones for their

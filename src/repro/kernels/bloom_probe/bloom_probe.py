@@ -2,10 +2,15 @@
 
 The LSM read path (§2.2) probes one Bloom filter per candidate SST; a
 serving node answering thousands of point reads per second probes in
-batches.  This kernel tests `k` splitmix64-derived hash positions per key
-against a packed bit array: grid over key blocks, filter words resident in
-VMEM, probes vectorised on the VPU (8x128 lanes).  Gather-heavy / zero-
-matmul by design — the memory-bound complement to the attention kernels.
+batches.  Keys arrive pre-hashed: the host splitmix64-hashes each uint64
+key (``repro.lsm.sstable._mix64`` — TPU lanes are 32-bit, so the 64-bit
+finaliser stays host-side) and ships the two uint32 halves ``lo`` / ``hi``
+(hi forced odd).  The kernel tests ``k`` Kirsch-Mitzenmacher positions
+``(lo + i*hi) mod (num_words*32)`` against a packed bit array: grid over
+key blocks, filter words resident in VMEM, probes vectorised on the VPU
+(8x128 lanes).  Gather-heavy / zero-matmul by design — the memory-bound
+complement to the attention kernels.  Bit-for-bit identical to the jnp
+oracle (``ref.py``) and the numpy fallback (``repro.lsm.filters``).
 """
 from __future__ import annotations
 
@@ -16,36 +21,31 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-# numpy scalars: plain literals inside the kernel (jnp constants would be
-# captured tracers, which pallas_call rejects)
-_MUL1 = np.uint32(0x85EBCA6B)
-_MUL2 = np.uint32(0xC2B2AE35)
 
-
-def _mix(x: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
-    x = x ^ seed
-    x = (x ^ (x >> np.uint32(16))) * _MUL1
-    x = (x ^ (x >> np.uint32(13))) * _MUL2
-    return x ^ (x >> np.uint32(16))
-
-
-def _probe_kernel(keys_ref, bits_ref, out_ref, *, k_hashes, num_words):
-    keys = keys_ref[...]                  # [block] uint32
+def _probe_kernel(lo_ref, hi_ref, bits_ref, out_ref, *, k_hashes,
+                  num_words):
+    lo = lo_ref[...]                      # [block] uint32
+    hi = hi_ref[...]                      # [block] uint32
     bits = bits_ref[...]                  # [num_words] uint32
-    hit = jnp.ones(keys.shape, jnp.int32)
+    # numpy scalar: plain literal inside the kernel (jnp constants would
+    # be captured tracers, which pallas_call rejects)
+    nbits = np.uint32(num_words * 32)
+    hit = jnp.ones(lo.shape, jnp.int32)
     for i in range(k_hashes):
-        h = _mix(keys, np.uint32((0x9E3779B9 * (i + 1)) & 0xFFFFFFFF))
-        word = (h >> np.uint32(5)) % np.uint32(num_words)
-        bit = h & np.uint32(31)
-        w = jnp.take(bits, word.astype(jnp.int32))
+        pos = (lo + np.uint32(i) * hi) % nbits
+        word = (pos >> np.uint32(5)).astype(jnp.int32)
+        bit = pos & np.uint32(31)
+        w = jnp.take(bits, word)
         hit &= ((w >> bit) & np.uint32(1)).astype(jnp.int32)
     out_ref[...] = hit
 
 
-def bloom_probe(keys: jnp.ndarray, bits: jnp.ndarray, *, k_hashes: int = 7,
-                block: int = 1024, interpret: bool = False) -> jnp.ndarray:
-    """keys: [N] uint32; bits: [W] uint32 packed filter. -> [N] int32."""
-    n = keys.shape[0]
+def bloom_probe(lo: jnp.ndarray, hi: jnp.ndarray, bits: jnp.ndarray, *,
+                k_hashes: int = 7, block: int = 1024,
+                interpret: bool = False) -> jnp.ndarray:
+    """lo, hi: [N] uint32 halves of the splitmix64 key hashes;
+    bits: [W] uint32 packed filter. -> [N] int32 hit mask."""
+    n = lo.shape[0]
     block = min(block, n)
     assert n % block == 0
     w = bits.shape[0]
@@ -56,9 +56,10 @@ def bloom_probe(keys: jnp.ndarray, bits: jnp.ndarray, *, k_hashes: int = 7,
         grid=(n // block,),
         in_specs=[
             pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((w,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         interpret=interpret,
-    )(keys, bits)
+    )(lo, hi, bits)

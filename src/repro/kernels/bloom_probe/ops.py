@@ -17,6 +17,8 @@ def _is_tpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("k_hashes", "interpret"))
-def probe(keys, bits, k_hashes: int = 7, interpret: Optional[bool] = None):
+def probe(lo, hi, bits, k_hashes: int = 7,
+          interpret: Optional[bool] = None):
+    """Probe a packed filter with pre-hashed keys (see ``bloom_probe``)."""
     interp = (not _is_tpu()) if interpret is None else interpret
-    return bloom_probe(keys, bits, k_hashes=k_hashes, interpret=interp)
+    return bloom_probe(lo, hi, bits, k_hashes=k_hashes, interpret=interp)

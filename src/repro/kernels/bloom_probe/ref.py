@@ -1,42 +1,67 @@
-"""Pure-jnp oracle for the Bloom probe + filter construction."""
+"""Pure-jnp oracle for the Bloom probe + filter construction.
+
+Hash family (shared bit-for-bit with the Pallas kernel and the numpy
+fallback in ``repro.lsm.filters``): keys are splitmix64-hashed host-side
+(``repro.lsm.sstable._mix64`` — jnp runs 32-bit by default, so the uint64
+finaliser never crosses into jax), the hash is split into uint32 halves
+``lo`` / ``hi`` (hi forced odd), and probe position ``i`` is
+Kirsch-Mitzenmacher double hashing ``(lo + i*hi) mod (num_words*32)`` in
+wrapping uint32 arithmetic.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-_MUL1 = jnp.uint32(0x85EBCA6B)
-_MUL2 = jnp.uint32(0xC2B2AE35)
 
-
-def _mix(x, seed):
-    x = x ^ seed
-    x = (x ^ (x >> 16)) * _MUL1
-    x = (x ^ (x >> 13)) * _MUL2
-    return x ^ (x >> 16)
-
-
-def build_filter(keys: jnp.ndarray, num_words: int,
+def build_filter(lo: jnp.ndarray, hi: jnp.ndarray, num_words: int,
                  k_hashes: int = 7) -> jnp.ndarray:
-    """Insert keys into a packed uint32 bit array (jnp, for the oracle).
+    """Insert pre-hashed keys into a packed uint32 bit array (jnp oracle).
 
     Bits are set on a flat bool array (duplicate scatter indices all write
     True, so no read-modify-write races) and packed into uint32 words."""
+    nbits = jnp.uint32(num_words * 32)
     flat = jnp.zeros((num_words * 32,), bool)
+    lo = lo.astype(jnp.uint32)
+    hi = hi.astype(jnp.uint32)
     for i in range(k_hashes):
-        h = _mix(keys.astype(jnp.uint32), jnp.uint32((0x9E3779B9 * (i + 1)) & 0xFFFFFFFF))
-        word = ((h >> 5) % jnp.uint32(num_words)).astype(jnp.int32)
-        bit = (h & jnp.uint32(31)).astype(jnp.int32)
-        flat = flat.at[word * 32 + bit].set(True)
+        pos = (lo + jnp.uint32(i) * hi) % nbits
+        flat = flat.at[pos.astype(jnp.int32)].set(True)
     lanes = flat.reshape(num_words, 32).astype(jnp.uint32)
     weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
     return jnp.sum(lanes * weights, axis=-1, dtype=jnp.uint32)
 
 
-def bloom_probe_ref(keys: jnp.ndarray, bits: jnp.ndarray,
+def bloom_probe_ref(lo: jnp.ndarray, hi: jnp.ndarray, bits: jnp.ndarray,
                     k_hashes: int = 7) -> jnp.ndarray:
-    hit = jnp.ones(keys.shape, jnp.int32)
+    """Probe one filter with pre-hashed keys -> int32[N] hit mask."""
+    nbits = jnp.uint32(bits.shape[0] * 32)
+    lo = lo.astype(jnp.uint32)
+    hi = hi.astype(jnp.uint32)
+    hit = jnp.ones(lo.shape, jnp.int32)
     for i in range(k_hashes):
-        h = _mix(keys.astype(jnp.uint32), jnp.uint32((0x9E3779B9 * (i + 1)) & 0xFFFFFFFF))
-        word = ((h >> 5) % jnp.uint32(bits.shape[0])).astype(jnp.int32)
-        bit = h & jnp.uint32(31)
+        pos = (lo + jnp.uint32(i) * hi) % nbits
+        word = (pos >> 5).astype(jnp.int32)
+        bit = pos & jnp.uint32(31)
         hit &= ((bits[word] >> bit) & jnp.uint32(1)).astype(jnp.int32)
+    return hit
+
+
+def bloom_probe_pairs_ref(lo: jnp.ndarray, hi: jnp.ndarray,
+                          word_off: jnp.ndarray, num_words: jnp.ndarray,
+                          bits_concat: jnp.ndarray,
+                          k_hashes: int = 7) -> jnp.ndarray:
+    """Ragged (key x filter) pairs probe: pair ``p`` tests the filter of
+    ``num_words[p]`` words starting at ``word_off[p]`` in the concatenated
+    word array — the batched LSM read path's shape (one vectorized call
+    over every candidate pair of a level)."""
+    nbits = num_words.astype(jnp.uint32) * jnp.uint32(32)
+    off = word_off.astype(jnp.int32)
+    lo = lo.astype(jnp.uint32)
+    hi = hi.astype(jnp.uint32)
+    hit = jnp.ones(lo.shape, jnp.int32)
+    for i in range(k_hashes):
+        pos = (lo + jnp.uint32(i) * hi) % nbits
+        word = off + (pos >> 5).astype(jnp.int32)
+        bit = pos & jnp.uint32(31)
+        hit &= ((bits_concat[word] >> bit) & jnp.uint32(1)).astype(jnp.int32)
     return hit

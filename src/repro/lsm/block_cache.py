@@ -38,8 +38,9 @@ class BlockCache:
 
     def insert(self, sst_id: int, block_idx: int) -> None:
         if self.capacity <= 0:
-            if self.on_evict is not None:
-                self.on_evict(sst_id, block_idx)
+            # a zero-capacity cache never held the block, so there is
+            # nothing to evict: firing the hint here admitted every single
+            # read into SSD cache zones in cache-less configs
             return
         key = (sst_id, block_idx)
         if key in self._od:

@@ -175,6 +175,11 @@ class DB:
     def get(self, key: int):
         return self._run(self.tree.get(key))
 
+    def get_batch(self, keys):
+        """Service concurrently-arriving point reads in one batched call
+        (vectorized Bloom probing; see ``LSMTree.get_batch``)."""
+        return self._run(self.tree.get_batch(list(keys)))
+
     def delete(self, key: int):
         return self._run(self.tree.delete(key))
 

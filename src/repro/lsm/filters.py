@@ -1,0 +1,202 @@
+"""Real packed Bloom filters with one unified hash family (splitmix64).
+
+Every SST carries a packed uint32 bit array built from its key set
+(``filter_bits_per_key`` bits per key, ``k = round(bits_per_key * ln 2)``
+probe positions).  The hash family is shared across every implementation:
+
+* keys are pre-hashed **host-side** with the same splitmix64 finaliser the
+  injected-FP oracle already uses (``sstable._mix64``) — uint64 hashing
+  never happens on the accelerator, where 64-bit lanes are unavailable;
+* the 64-bit hash is split into two uint32 halves ``lo = h & 0xffffffff``
+  and ``hi = (h >> 32) | 1`` (forced odd so the probe stride cycles);
+* probe position ``i`` is Kirsch-Mitzenmacher double hashing,
+  ``pos_i = (lo + i * hi) mod (num_words * 32)``, computed in wrapping
+  uint32 arithmetic — bit-for-bit identical in the pure-numpy fallback
+  here, the jnp oracle (``repro.kernels.bloom_probe.ref``), and the Pallas
+  kernel (``repro.kernels.bloom_probe``).
+
+The numpy fallback is the simulator default (no jax import required);
+``impl="jax"`` routes probes through the kernel package, and the
+cross-implementation agreement is asserted by ``tests/test_filters.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .sstable import SST, _mix64
+
+_LN2 = math.log(2.0)
+_M64 = (1 << 64) - 1
+_M32 = (1 << 32) - 1
+
+
+# ----------------------------------------------------------------------
+# hashing
+# ----------------------------------------------------------------------
+def split_hash(keys) -> Tuple[np.ndarray, np.ndarray]:
+    """splitmix64 the uint64 keys, split into (lo, hi) uint32 halves.
+
+    ``hi`` is forced odd so the double-hashing stride is coprime with any
+    power-of-two and never collapses the k probe positions onto one bit.
+    """
+    keys = np.atleast_1d(np.asarray(keys, dtype=np.uint64))
+    h = _mix64(keys)
+    lo = (h & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (h >> np.uint64(32)).astype(np.uint32) | np.uint32(1)
+    return lo, hi
+
+
+def _split_hash_int(key: int) -> Tuple[int, int]:
+    """Python-int twin of :func:`split_hash` for the per-key read path."""
+    x = key & _M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
+    x = x ^ (x >> 31)
+    return x & _M32, (x >> 32) | 1
+
+
+def filter_params(num_keys: int, bits_per_key: int) -> Tuple[int, int]:
+    """(num_words, k_hashes) for a key count at a bits-per-key budget."""
+    nbits = max(1, int(num_keys)) * max(1, int(bits_per_key))
+    num_words = max(1, -(-nbits // 32))
+    k = max(1, min(16, int(round(bits_per_key * _LN2))))
+    return num_words, k
+
+
+# ----------------------------------------------------------------------
+# pure-numpy build + probe (the simulator default; no jax required)
+# ----------------------------------------------------------------------
+def build_filter_np(lo: np.ndarray, hi: np.ndarray, num_words: int,
+                    k_hashes: int) -> np.ndarray:
+    """Set k bits per key on a packed uint32 array (same packing as the
+    jnp oracle: word ``w`` bit ``b`` lives at flat index ``w*32 + b``)."""
+    nbits = np.uint32(num_words * 32)
+    flat = np.zeros(num_words * 32, dtype=bool)
+    with np.errstate(over="ignore"):
+        for i in range(k_hashes):
+            pos = (lo + np.uint32(i) * hi) % nbits
+            flat[pos.astype(np.int64)] = True
+    lanes = flat.reshape(num_words, 32).astype(np.uint32)
+    weights = np.uint32(1) << np.arange(32, dtype=np.uint32)
+    return np.sum(lanes * weights, axis=-1, dtype=np.uint32)
+
+
+def probe_np(lo: np.ndarray, hi: np.ndarray, bits: np.ndarray,
+             k_hashes: int) -> np.ndarray:
+    """Probe one filter with a batch of pre-hashed keys -> bool[N]."""
+    nbits = np.uint32(bits.shape[0] * 32)
+    hit = np.ones(lo.shape, dtype=bool)
+    with np.errstate(over="ignore"):
+        for i in range(k_hashes):
+            pos = (lo + np.uint32(i) * hi) % nbits
+            w = bits[(pos >> np.uint32(5)).astype(np.int64)]
+            hit &= ((w >> (pos & np.uint32(31))) & np.uint32(1)).astype(bool)
+    return hit
+
+
+def probe_pairs_np(lo: np.ndarray, hi: np.ndarray, word_off: np.ndarray,
+                   num_words: np.ndarray, bits_concat: np.ndarray,
+                   k_hashes: int) -> np.ndarray:
+    """Probe P (key x filter) pairs in one vectorized call.
+
+    ``bits_concat`` is the concatenation of every candidate SST's filter
+    words; pair ``p`` probes the ``num_words[p]`` words starting at
+    ``word_off[p]``.  This is the ragged form the batched read path needs:
+    each key may probe a different filter per level.
+    """
+    nbits = (num_words.astype(np.uint32) * np.uint32(32))
+    off = word_off.astype(np.int64)
+    hit = np.ones(lo.shape, dtype=bool)
+    with np.errstate(over="ignore"):
+        for i in range(k_hashes):
+            pos = (lo + np.uint32(i) * hi) % nbits
+            w = bits_concat[off + (pos >> np.uint32(5)).astype(np.int64)]
+            hit &= ((w >> (pos & np.uint32(31))) & np.uint32(1)).astype(bool)
+    return hit
+
+
+def probe_one_np(key: int, bits: np.ndarray, k_hashes: int) -> bool:
+    """Scalar probe in plain python ints — the per-key `get` fast path.
+
+    Bitwise-identical to :func:`probe_np` on a length-1 batch (asserted by
+    ``tests/test_filters.py``); avoids numpy array overhead per get.
+    """
+    lo, hi = _split_hash_int(key)
+    nbits = bits.shape[0] * 32
+    for i in range(k_hashes):
+        pos = ((lo + i * hi) & _M32) % nbits
+        if not (int(bits[pos >> 5]) >> (pos & 31)) & 1:
+            return False
+    return True
+
+
+# ----------------------------------------------------------------------
+# jax route (kernel package) — optional, bit-identical
+# ----------------------------------------------------------------------
+_HAVE_JAX: Optional[bool] = None
+
+
+def have_jax() -> bool:
+    global _HAVE_JAX
+    if _HAVE_JAX is None:
+        try:
+            import jax  # noqa: F401
+            _HAVE_JAX = True
+        except Exception:
+            _HAVE_JAX = False
+    return _HAVE_JAX
+
+
+def resolve_impl(impl: str) -> str:
+    """"auto" -> the kernel/ref route when jax imports, else numpy."""
+    if impl == "auto":
+        return "jax" if have_jax() else "numpy"
+    if impl not in ("numpy", "jax"):
+        raise ValueError(f"unknown filter impl {impl!r}")
+    return impl
+
+
+def probe_pairs(lo, hi, word_off, num_words, bits_concat, k_hashes,
+                impl: str = "numpy") -> np.ndarray:
+    """Dispatch the ragged pairs probe to the selected implementation."""
+    if resolve_impl(impl) == "jax":
+        from ..kernels.bloom_probe.ref import bloom_probe_pairs_ref
+        out = bloom_probe_pairs_ref(lo, hi, word_off.astype(np.int32),
+                                    num_words.astype(np.uint32),
+                                    bits_concat, k_hashes=k_hashes)
+        return np.asarray(out).astype(bool)
+    return probe_pairs_np(lo, hi, word_off, num_words, bits_concat, k_hashes)
+
+
+# ----------------------------------------------------------------------
+# SST attachment
+# ----------------------------------------------------------------------
+def attach_filter(sst: SST, bits_per_key: int) -> None:
+    """Build and attach the packed filter for an SST's key set."""
+    num_words, k = filter_params(sst.num_objs, bits_per_key)
+    lo, hi = split_hash(sst.keys)
+    sst.filter_words = build_filter_np(lo, hi, num_words, k)
+    sst.filter_k = k
+
+
+def concat_filters(ssts: Sequence[SST]) -> Tuple[np.ndarray, dict]:
+    """Concatenate distinct SSTs' filter words for the pairs probe.
+
+    Returns (bits_concat, {sid: (word_off, num_words)}).
+    """
+    offsets: dict = {}
+    chunks: List[np.ndarray] = []
+    off = 0
+    for sst in ssts:
+        if sst.sid in offsets or sst.filter_words is None:
+            continue
+        w = sst.filter_words
+        offsets[sst.sid] = (off, len(w))
+        chunks.append(w)
+        off += len(w)
+    bits = (np.concatenate(chunks) if chunks
+            else np.zeros(0, dtype=np.uint32))
+    return bits, offsets

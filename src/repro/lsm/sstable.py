@@ -5,11 +5,17 @@ with vectorised numpy); per-key tombstone bits support deletes.  Values are
 optionally materialised (correctness tests / the quickstart example run with
 ``store_values=True``; large benchmark runs track sizes only).
 
-Each SST also carries a Bloom filter abstraction: membership is exact via
-binary search (we *have* the key set), and false positives are injected
-deterministically from a hash of (key, sst uid) at the configured FP rate —
-reproducing the paper's ~1% Bloom FP read amplification without storing bit
-arrays.
+Each SST carries a Bloom filter in one of two modes (``LSMConfig.filters``):
+
+* ``"real"`` (default): a packed uint32 bit array built from the key set by
+  ``repro.lsm.filters`` (splitmix64-derived double hashing, shared
+  bit-for-bit with the ``repro.kernels.bloom_probe`` Pallas kernel and its
+  jnp oracle), stored in ``filter_words``/``filter_k``.
+* ``"injected"``: the original differential oracle — membership is exact
+  via binary search (we *have* the key set) and false positives are
+  injected deterministically from a hash of (key, sst uid) at the
+  configured FP rate, reproducing the paper's ~1% Bloom FP read
+  amplification without storing bit arrays.
 """
 from __future__ import annotations
 
@@ -65,6 +71,11 @@ class SST:
     locked: bool = False                  # selected by a running compaction
     migrating: bool = False               # being moved between tiers
     values: Optional[Dict[int, bytes]] = None
+    # real Bloom filter (filters="real"): packed uint32 bit array + probe
+    # count, built by repro.lsm.filters.attach_filter; None under the
+    # injected-FP oracle mode
+    filter_words: Optional[np.ndarray] = None
+    filter_k: int = 0
 
     # ------------------------------------------------------------------
     @property

@@ -12,6 +12,7 @@ interference with background jobs) is accounted per operation.
 """
 from __future__ import annotations
 
+from bisect import bisect_right
 from dataclasses import dataclass, field
 from typing import Dict, Generator, List, Optional, Set, Tuple
 
@@ -21,6 +22,7 @@ from ..core.hints import (CompactionDoneHint, CompactionOutputHint,
                           CompactionTriggerHint, FlushHint)
 from ..core.middleware import HybridZonedBackend
 from ..zoned.sim import Semaphore, Sim
+from . import filters
 from .block_cache import BlockCache
 from .sstable import SST, merge_runs
 
@@ -35,7 +37,16 @@ class LSMConfig:
     max_memtables: int = 4
     level_targets: Tuple[int, ...] = ()  # bytes per level; set by scenario
     num_levels: int = 5
-    bloom_fp_rate: float = 0.01
+    bloom_fp_rate: float = 0.01          # injected-FP oracle mode only
+    # Bloom filter mode: "real" builds packed bit arrays per SST
+    # (repro.lsm.filters, splitmix64-unified with the bloom_probe kernel);
+    # "injected" keeps the synthetic-FP differential oracle
+    filters: str = "real"
+    filter_bits_per_key: int = 10
+    # probe implementation for the batched read path: "numpy" (default,
+    # always available), "jax" (kernel package's jnp oracle), or "auto"
+    # ("jax" when importable, else "numpy") — all bit-identical
+    filter_impl: str = "numpy"
     block_cache_blocks: int = 8
     max_background_jobs: int = 12
     l0_stall_files: int = 36
@@ -105,8 +116,13 @@ class LSMTree:
         self.stats: Dict[str, float] = {
             "puts": 0, "gets": 0, "hits": 0, "scans": 0,
             "write_stalls": 0, "compactions": 0, "flushes": 0,
-            "bloom_fp": 0, "delayed_writes": 0,
+            "bloom_fp": 0, "filter_probes": 0, "delayed_writes": 0,
         }
+        # per-level read index (sorted candidate arrays + concatenated
+        # filter image), rebuilt lazily whenever the level's membership
+        # epoch moves — see _level_index
+        self._level_epoch: List[int] = [0] * (cfg.num_levels + 2)
+        self._ridx: Dict[int, Tuple] = {}
 
     # ------------------------------------------------------------------
     def _on_evict(self, sst_id: int, block_idx: int) -> None:
@@ -127,11 +143,13 @@ class LSMTree:
         self.levels[level].append(sst)
         self._level_bytes[level] += sst.size_bytes
         self.manifest[sst.sid] = sst
+        self._level_epoch[level] += 1
 
     def _remove_sst(self, sst: SST) -> None:
         self.levels[sst.level].remove(sst)
         self._level_bytes[sst.level] -= sst.size_bytes
         self.manifest.pop(sst.sid, None)
+        self._level_epoch[sst.level] += 1
 
     def compaction_debt(self) -> int:
         return sum(max(0, self._level_bytes[l] - self.cfg.target_of(l))
@@ -321,10 +339,13 @@ class LSMTree:
         vals = None
         if self.cfg.store_values and values is not None:
             vals = {int(k): values.get(int(k)) for k in keys}
-        return SST(sid=self._new_sst_id(), level=level, keys=keys,
-                   tombs=tombs, obj_size=self.cfg.obj_size,
-                   block_size=self.cfg.block_size, birth=self.sim.now,
-                   values=vals)
+        sst = SST(sid=self._new_sst_id(), level=level, keys=keys,
+                  tombs=tombs, obj_size=self.cfg.obj_size,
+                  block_size=self.cfg.block_size, birth=self.sim.now,
+                  values=vals)
+        if self.cfg.filters == "real":
+            filters.attach_filter(sst, self.cfg.filter_bits_per_key)
+        return sst
 
     def _wake_stalled(self) -> None:
         waiters, self._stall_waiters = self._stall_waiters, []
@@ -452,9 +473,8 @@ class LSMTree:
     # ==================================================================
     # read path
     # ==================================================================
-    def get(self, key: int) -> Generator:
-        """Generator returning (found, value|None)."""
-        self.stats["gets"] += 1
+    def _memtable_lookup(self, key: int):
+        """Newest-first memtable-tier lookup -> (found, value) or None."""
         for m in [self.memtable] + list(reversed(self.immutables)) \
                 + list(reversed(self._flushing)):
             if key in m.data:
@@ -462,32 +482,197 @@ class LSMTree:
                 if not tomb:
                     self.stats["hits"] += 1
                 return (not tomb, val)
-        cfg = self.cfg
+        return None
+
+    def _level_index(self, lvl: int):
+        """Read index for one level, rebuilt only when the level's
+        membership epoch moves (SST install/remove): candidate SSTs in
+        lookup order, their key ranges as plain ints / a sorted uint64
+        array for bisection, and the level's concatenated filter image
+        for the vectorized batch probe.
+
+        L0 files overlap, so they are ordered newest-first by ``birth`` —
+        the list's install order is NOT trustworthy (after ``DB.reopen()``
+        the manifest rebuild installs by sid, and migrations can reorder
+        too); trusting it returned stale versions.  Deeper levels are
+        disjoint, so each key has at most one candidate, found by
+        bisecting the sorted min-key array."""
+        cached = self._ridx.get(lvl)
+        if cached is not None and cached[0] == self._level_epoch[lvl]:
+            return cached[1]
+        if lvl == 0:
+            ssts = sorted(self.levels[0], key=lambda s: -s.birth)
+            mins: List[int] = []
+            mins_np = None
+        else:
+            ssts = sorted(self.levels[lvl], key=lambda s: s.min_key)
+            mins = [s.min_key for s in ssts]
+            mins_np = np.array(mins, dtype=np.uint64)
+        maxs = [s.max_key for s in ssts]
+        bits, offsets = (filters.concat_filters(ssts)
+                         if self.cfg.filters == "real" else (None, None))
+        idx = (ssts, mins, mins_np, maxs, bits, offsets)
+        self._ridx[lvl] = (self._level_epoch[lvl], idx)
+        return idx
+
+    def _level_candidates(self, lvl: int, key: int) -> List[SST]:
+        """SSTs of level ``lvl`` whose range covers ``key``, in lookup
+        order (see _level_index for the ordering contract)."""
+        ssts, mins, _, maxs, _, _ = self._level_index(lvl)
+        if lvl == 0:
+            return [s for s in ssts if s.min_key <= key <= s.max_key]
+        j = bisect_right(mins, key) - 1
+        if j >= 0 and key <= maxs[j]:
+            return [ssts[j]]
+        return []
+
+    def _filter_hit(self, sst: SST, key: int) -> bool:
+        """One Bloom probe under the configured filter mode."""
+        self.stats["filter_probes"] += 1
+        if self.cfg.filters == "injected":
+            return sst.bloom_maybe_contains(key, self.cfg.bloom_fp_rate)
+        if sst.filter_words is None:       # filterless SST: must check
+            return True
+        return filters.probe_one_np(key, sst.filter_words, sst.filter_k)
+
+    def _probe_sst(self, sst: SST, key: int) -> Generator:
+        """Exact lookup in one surviving candidate: block I/O (cache hit
+        or device read), logical-read accounting, tombstone check.
+        Returns (found, value|None) or None when the key is absent (a
+        Bloom false positive)."""
+        found, idx = sst.find(key)
+        blk = sst.block_of(idx if found else
+                           min(idx, max(sst.num_objs - 1, 0)))
+        # logical read: the §3.4 popularity signal counts cache hits too —
+        # a fully cache-resident hot SST must not look cold to the migrator
+        sst.num_reads += 1
+        if not self.block_cache.get(sst.sid, blk):
+            yield from self.backend.read_block(sst, blk)
+            self.block_cache.insert(sst.sid, blk)
+        if found:
+            if bool(sst.tombs[idx]):
+                return (False, None)
+            self.stats["hits"] += 1
+            val = sst.values.get(key) if sst.values else None
+            return (True, val)
+        self.stats["bloom_fp"] += 1
+        return None
+
+    def get(self, key: int) -> Generator:
+        """Generator returning (found, value|None)."""
+        self.stats["gets"] += 1
+        mem = self._memtable_lookup(key)
+        if mem is not None:
+            return mem
         for lvl in range(len(self.levels)):
-            if lvl == 0:
-                candidates = [s for s in reversed(self.levels[0])
-                              if s.min_key <= key <= s.max_key]
-            else:
-                candidates = [s for s in self.levels[lvl]
-                              if s.min_key <= key <= s.max_key]
-            for sst in candidates:
-                if not sst.bloom_maybe_contains(key, cfg.bloom_fp_rate):
+            for sst in self._level_candidates(lvl, key):
+                if not self._filter_hit(sst, key):
                     continue
-                found, idx = sst.find(key)
-                blk = sst.block_of(idx if found else
-                                   min(idx, max(sst.num_objs - 1, 0)))
-                if not self.block_cache.get(sst.sid, blk):
-                    yield from self.backend.read_block(sst, blk)
-                    self.block_cache.insert(sst.sid, blk)
-                if found:
-                    if bool(sst.tombs[idx]):
-                        return (False, None)
-                    self.stats["hits"] += 1
-                    val = sst.values.get(key) if sst.values else None
-                    return (True, val)
-                else:
-                    self.stats["bloom_fp"] += 1
+                res = yield from self._probe_sst(sst, key)
+                if res is not None:
+                    return res
         return (False, None)
+
+    def get_batch(self, keys: List[int]) -> Generator:
+        """Service a batch of point reads; returns [(found, value|None)].
+
+        Result-identical to per-key :meth:`get` (asserted across every
+        scheme by ``tests/test_differential.py``): the same newest-first
+        lookup order, the same block I/O per surviving candidate.  The
+        difference is *how* candidates are found and probed — per level,
+        the (key x candidate-SST) pairs of all still-unresolved keys are
+        filtered in one vectorized Bloom call (numpy fallback or the
+        ``bloom_probe`` kernel family, per ``LSMConfig.filter_impl``), and
+        only survivors reach the block cache / backend."""
+        n = len(keys)
+        self.stats["gets"] += n
+        results: List[Optional[Tuple[bool, Optional[bytes]]]] = [None] * n
+        pending: List[int] = []
+        for i, key in enumerate(keys):
+            mem = self._memtable_lookup(key)
+            if mem is not None:
+                results[i] = mem
+            else:
+                pending.append(i)
+        real = self.cfg.filters == "real"
+        for lvl in range(len(self.levels)):
+            if not pending:
+                break
+            if not self.levels[lvl]:
+                continue
+            idx = self._level_index(lvl)
+            ssts, _, mins_np, maxs, bits, offsets = idx
+            # candidate pairs, grouped per key in lookup order; deeper
+            # levels are disjoint, so one searchsorted over the whole
+            # batch replaces per-key range scans
+            pair_of: List[List[SST]] = []
+            if lvl == 0:
+                for i in pending:
+                    k = keys[i]
+                    pair_of.append([s for s in ssts
+                                    if s.min_key <= k <= s.max_key])
+            else:
+                karr = np.fromiter((keys[i] for i in pending),
+                                   np.uint64, len(pending))
+                pos = np.searchsorted(mins_np, karr, side="right") - 1
+                for t, i in enumerate(pending):
+                    j = int(pos[t])
+                    pair_of.append([ssts[j]] if j >= 0
+                                   and keys[i] <= maxs[j] else [])
+            flat = [(i, sst) for i, cands in zip(pending, pair_of)
+                    for sst in cands]
+            if not flat:
+                continue
+            if real:
+                hits = self._probe_pairs_real(
+                    np.array([keys[i] for i, _ in flat], dtype=np.uint64),
+                    [sst for _, sst in flat], bits, offsets)
+            else:
+                hits = [sst.bloom_maybe_contains(keys[i],
+                                                 self.cfg.bloom_fp_rate)
+                        for i, sst in flat]
+            # walk survivors per key in candidate order, stopping at the
+            # first exact hit — byte-identical I/O to the per-key path
+            self.stats["filter_probes"] += len(flat)
+            cursor = 0
+            still: List[int] = []
+            for i, cands in zip(pending, pair_of):
+                key = keys[i]
+                for j, sst in enumerate(cands):
+                    if results[i] is not None or not hits[cursor + j]:
+                        continue
+                    res = yield from self._probe_sst(sst, key)
+                    if res is not None:
+                        results[i] = res
+                cursor += len(cands)
+                if results[i] is None:
+                    still.append(i)
+            pending = still
+        for i in pending:
+            results[i] = (False, None)
+        return results
+
+    def _probe_pairs_real(self, pair_keys: np.ndarray,
+                          pair_ssts: List[SST],
+                          bits: Optional[np.ndarray] = None,
+                          offsets: Optional[Dict] = None) -> np.ndarray:
+        """Vectorized real-filter probe over (key, SST) pairs, against a
+        precomputed filter image (``_level_index``) when available."""
+        if bits is None:
+            bits, offsets = filters.concat_filters(pair_ssts)
+        # filterless SSTs (built under another mode) always pass
+        hits = np.ones(len(pair_ssts), dtype=bool)
+        mask = np.array([s.sid in offsets for s in pair_ssts], dtype=bool)
+        if not mask.any():
+            return hits
+        lo, hi = filters.split_hash(pair_keys[mask])
+        sel = [s for s in pair_ssts if s.sid in offsets]
+        off = np.array([offsets[s.sid][0] for s in sel], dtype=np.int64)
+        nw = np.array([offsets[s.sid][1] for s in sel], dtype=np.int64)
+        k = max(s.filter_k for s in sel)
+        hits[mask] = filters.probe_pairs(lo, hi, off, nw, bits, k,
+                                         impl=self.cfg.filter_impl)
+        return hits
 
     def scan(self, start_key: int, count: int) -> Generator:
         """Range scan over [start, start+count): reads the covering blocks
@@ -521,6 +706,7 @@ class LSMTree:
                 for b in range(nblocks):
                     blk = sst.block_of(min(a + b * sst.objs_per_block,
                                            sst.num_objs - 1))
+                    sst.num_reads += 1   # logical read, cache hit or miss
                     if not self.block_cache.get(sst.sid, blk):
                         yield from self.backend.read_block(sst, blk)
                         self.block_cache.insert(sst.sid, blk)

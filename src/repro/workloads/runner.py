@@ -403,7 +403,7 @@ def _mean(arr: np.ndarray) -> float:
 def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
                   duration: float, n_keys: int, *, warmup: float = 0.0,
                   max_concurrency: int = 64, seed: int = 1,
-                  drain: bool = True,
+                  drain: bool = True, read_batch: int = 1,
                   faults: Optional[FaultSpec] = None) -> OpenLoopResult:
     """Open-loop run: ops arrive per ``arrival`` regardless of completion.
 
@@ -418,6 +418,16 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
     queued or in flight are excluded from statistics but remain pending
     work in the store — a later ``db.drain()`` or follow-up run on the
     same DB executes them, exactly as real queued requests would.
+
+    ``read_batch`` > 1 turns on the batched read path: a server pulling a
+    point READ from the queue also takes up to ``read_batch - 1`` further
+    *consecutively queued* point reads (concurrently-arrived gets) and
+    services them in one ``LSMTree.get_batch`` call — one vectorized Bloom
+    probe over every (key x candidate-SST) pair instead of per-key python
+    probing.  Results are identical to ``read_batch=1``; batched ops share
+    a service start and completion time.  The default (1) keeps the
+    per-key path, preserving event-for-event equivalence with
+    ``run_multi_tenant`` (which does not batch).
 
     ``faults`` arms a :class:`repro.zoned.faults.FaultSpec` against the
     run: stall/slow/zone-reset windows perturb the devices underneath the
@@ -468,6 +478,19 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
                 idle.append(ev)
                 yield ev
             i = queue.popleft()
+            if read_batch > 1 and stream.is_point_read(i):
+                batch = [i]
+                while (queue and len(batch) < read_batch
+                       and stream.is_point_read(queue[0])):
+                    batch.append(queue.popleft())
+                now = sim.now
+                for j in batch:
+                    start[j] = now
+                yield from stream.execute_read_batch(batch)
+                now = sim.now
+                for j in batch:
+                    done[j] = now
+                continue
             start[i] = sim.now
             yield from stream.execute(i)
             done[i] = sim.now
@@ -945,11 +968,16 @@ class ScenarioCell:
     arrival: ArrivalProcess
     ssd_zones: int
     fault: Optional[FaultSpec] = None
+    # Bloom bits-per-key override for this cell's store (None = the
+    # scenario default) — the filter-sweep axis
+    filter_bits: Optional[int] = None
 
     @property
     def name(self) -> str:
         base = (f"{self.scheme}/{self.workload.name}/"
                 f"{self.arrival.name}/z{self.ssd_zones}")
+        if self.filter_bits is not None:
+            base += f"/fb{self.filter_bits}"
         if self.fault is not None:
             base += f"/f:{self.fault.name}"
         return base
@@ -1037,6 +1065,14 @@ class ScenarioMatrix:
     # fault-injection sweep dimension (single-stream AND multi-tenant
     # cells); None = the undisturbed baseline cell
     faults: Sequence[Optional[FaultSpec]] = (None,)
+    # Bloom filter-bits sweep dimension (single-stream cells only): each
+    # non-None entry loads the cell's store with that
+    # ``filter_bits_per_key``; rows then carry a ``filter_bits`` column
+    # (FP rate x throughput pivot: ``benchmarks.report.filter_sweep_table``)
+    filter_bits: Sequence[Optional[int]] = (None,)
+    # batched read path: >1 services consecutively queued point reads via
+    # ``LSMTree.get_batch`` (see ``run_open_loop``)
+    read_batch: int = 1
     # telemetry (repro.obs): True (or a sample period in virtual seconds)
     # attaches a MetricsRegistry to every cell's store — pull-only, so
     # rows stay byte-identical (asserted by CI grid-smoke); with
@@ -1061,18 +1097,29 @@ class ScenarioMatrix:
                     for pol in self.policies
                     for z in self.ssd_zone_budgets
                     for f in self.faults]
-        return [ScenarioCell(s, w, a, z, f)
+        return [ScenarioCell(s, w, a, z, f, fb)
                 for s in self.schemes
                 for w in map(self._workload_spec, self.workloads)
                 for a in self._arrivals_of(w)
                 for z in self.ssd_zone_budgets
-                for f in self.faults]
+                for f in self.faults
+                for fb in self.filter_bits]
 
-    def _fresh_db(self, scheme: str, ssd_zones: int):
+    def _fresh_db(self, scheme: str, ssd_zones: int,
+                  filter_bits: Optional[int] = None):
         if self.db_factory is not None:
+            # factories only need to understand filter_bits when the
+            # matrix actually sweeps it (GridDBFactory does)
+            if filter_bits is not None:
+                return self.db_factory(scheme, ssd_zones,
+                                       filter_bits=filter_bits)
             return self.db_factory(scheme, ssd_zones)
+        from dataclasses import replace as _replace
         from ..lsm import DB, ScenarioConfig
         sc = ScenarioConfig(ssd_zones=ssd_zones)
+        if filter_bits is not None:
+            sc = _replace(sc, lsm=_replace(
+                sc.lsm, filter_bits_per_key=int(filter_bits)))
         db = DB(scheme, sc)
         n_keys = sc.paper_keys // self.key_div
         run_load(db, n_keys=n_keys)
@@ -1091,7 +1138,8 @@ class ScenarioMatrix:
         Returns the per-(sub)run results plus their JSON rows (one per
         tenant for multi-tenant cells, else exactly one).
         """
-        db = self._fresh_db(cell.scheme, cell.ssd_zones)
+        db = self._fresh_db(cell.scheme, cell.ssd_zones,
+                            getattr(cell, "filter_bits", None))
         n_keys = getattr(db, "n_keys",
                          db.scenario.paper_keys // self.key_div)
         reg = None
@@ -1112,7 +1160,7 @@ class ScenarioMatrix:
                 db, cell.workload, cell.arrival, self.duration,
                 n_keys=n_keys, warmup=self.warmup,
                 max_concurrency=self.max_concurrency, seed=self.seed,
-                faults=cell.fault)]
+                read_batch=self.read_batch, faults=cell.fault)]
         if reg is not None:
             reg.sample_now()        # close the series at end-of-run state
             if self.timeline_dir is not None:
@@ -1126,6 +1174,9 @@ class ScenarioMatrix:
             row = r.to_json()
             row["ssd_zones"] = cell.ssd_zones
             row["cell"] = cell.name
+            fb = getattr(cell, "filter_bits", None)
+            if fb is not None:
+                row["filter_bits"] = fb
             rows.append(row)
         return per_cell, rows
 

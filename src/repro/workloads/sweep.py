@@ -64,9 +64,14 @@ class GridDBFactory:
     key_div: int = 1
     load_div: int = 4
 
-    def __call__(self, scheme: str, ssd_zones: int):
+    def __call__(self, scheme: str, ssd_zones: int,
+                 filter_bits: Optional[int] = None):
+        from dataclasses import replace
         from ..lsm import DB, ScenarioConfig
         sc = ScenarioConfig(ssd_zones=ssd_zones)
+        if filter_bits is not None:     # the matrix's filter-bits axis
+            sc = replace(sc, lsm=replace(
+                sc.lsm, filter_bits_per_key=int(filter_bits)))
         db = DB(scheme, sc)
         n = sc.paper_keys // (self.load_div * self.key_div)
         run_load(db, n_keys=n)

@@ -147,6 +147,21 @@ class OpStream:
             return int(self.load_order[off]) if off < self.n_keys else off
         return int(self.scramble[rank % self.n_keys])
 
+    def is_point_read(self, i: int) -> bool:
+        """Whether op ``i`` is a point READ (batchable by the open-loop
+        runner's vectorized-probe read path)."""
+        return int(self.ops.codes[i]) == READ
+
+    def execute_read_batch(self, idxs):
+        """Generator servicing several point READs in one
+        ``LSMTree.get_batch`` call (vectorized Bloom probing).  Result-
+        identical to executing them one by one; only service timing and
+        python overhead differ."""
+        keys = [self.resolve(READ, int(self.ops.args[i])) for i in idxs]
+        res = yield from self.tree.get_batch(keys)
+        self.counts["read"] += len(idxs)
+        return res
+
     def execute(self, i: int):
         """Generator running op ``i`` against the tree (virtual-timed)."""
         code = int(self.ops.codes[i])
@@ -178,6 +193,10 @@ def collect_extras(db) -> Dict[str, float]:
         "ssd_write_bytes": db.ssd.counters.write_bytes,
         "hdd_write_bytes": db.hdd.counters.write_bytes,
         "block_cache_hit_rate": tree.block_cache.hit_rate(),
+        # Bloom accounting: probes of candidate SSTs and survivors that
+        # turned out absent; fp-per-probe = bloom_fp / filter_probes
+        "filter_probes": tree.stats["filter_probes"],
+        "bloom_fp": tree.stats["bloom_fp"],
     }
     if db.backend.cache is not None:
         extras["ssd_cache_hits"] = db.backend.cache.hits

@@ -71,6 +71,58 @@ def _model_answers(ops):
     return out, scan_live
 
 
+def _run_sequence_batched(scheme, ops, batch=8):
+    """Same sequence, but gets are accumulated and serviced through the
+    vectorized ``get_batch`` path (flushing pending gets before any
+    mutation so read-your-writes ordering is preserved)."""
+    db = DB(scheme, tiny_scenario(), store_values=True)
+    out = []
+    scans = []
+    pending = []
+
+    def flush_gets():
+        if pending:
+            for key, res in zip(pending, db.get_batch(pending)):
+                out.append(("get", key, res))
+            pending.clear()
+
+    for op, key, arg in ops:
+        if op == "get":
+            pending.append(key)
+            if len(pending) >= batch:
+                flush_gets()
+            continue
+        flush_gets()
+        if op == "put":
+            db.put(key, arg)
+        elif op == "del":
+            db.delete(key)
+        else:
+            scans.append((key, arg, db.scan(key, arg)))
+    flush_gets()
+    db.drain()
+    keys = list(range(0, 350, 7))
+    for key, res in zip(keys, db.get_batch(keys)):
+        out.append(("final", key, res))
+    return out, scans
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_batched_gets_identical_to_per_key(seed):
+    """Tentpole invariant: the batched Bloom-probe read path is result-
+    identical to per-key ``get`` under every placement scheme (filter
+    false positives may change I/O, never answers)."""
+    ops = _op_sequence(seed, n_ops=300, key_space=250)
+    expected, scan_live = _model_answers(ops)
+    for scheme in SCHEMES:
+        got, scans = _run_sequence_batched(scheme, ops)
+        assert len(got) == len(expected)
+        for g, e in zip(got, expected):
+            assert g == e, (f"scheme {scheme} batched read diverges at "
+                            f"{g[0]}({g[1]}): got {g[2]!r}, expected {e[2]!r}")
+        assert [s[2] for s in scans] == [s[2] for s in scan_live]
+
+
 @pytest.mark.parametrize("seed", [0, 1])
 def test_all_schemes_agree_and_match_model(seed):
     ops = _op_sequence(seed)

@@ -4,11 +4,15 @@ The hypothesis-driven property test only runs when the package is
 installed; a deterministic randomized fallback keeps the dict-model
 invariant covered either way.
 """
+from dataclasses import replace
+
 import numpy as np
 import pytest
 
 from conftest import tiny_scenario
 from repro.lsm import DB
+from repro.lsm.block_cache import BlockCache
+from repro.zoned.device import MiB
 
 try:
     from hypothesis import HealthCheck, given, settings
@@ -150,6 +154,68 @@ def test_scan_counts():
     _load(db, 2000)
     seen = db.scan(500, 40)
     assert seen >= 40          # every key in [500, 540) exists
+
+
+def test_post_recovery_l0_reads_survive_list_reorder():
+    """Regression: `get` trusted L0 *list position* (reversed()) for
+    recency while compaction/scan sort by -birth.  ``reopen_gen``
+    installs L0 in ascending-sid order — accidentally newest-last — but
+    nothing guarantees that, so reads must order L0 candidates by birth,
+    not by list position."""
+    sc = tiny_scenario()
+    big = int(100 * MiB)            # L0 target huge: no compaction
+    sc = replace(sc, lsm=replace(sc.lsm, level_targets=(big,) * 5))
+    db = DB("HHZS", sc, store_values=True)
+    for k in range(40):
+        db.put(k, b"old-%d" % k)
+    db.flush_all()
+    for k in range(40):
+        db.put(k, b"new-%d" % k)
+    db.flush_all()
+    db.drain()
+    db.crash()
+    db.reopen()
+    l0 = db.tree.levels[0]
+    assert len(l0) >= 2 and not any(db.tree.levels[i]
+                                    for i in range(1, len(db.tree.levels)))
+    # read back under adversarial list orders (newest-first is the one a
+    # reversed()-based read path gets exactly backwards)
+    for perm in (sorted(l0, key=lambda s: -s.birth),
+                 sorted(l0, key=lambda s: s.birth)):
+        db.tree.levels[0] = list(perm)
+        for k in range(40):
+            assert db.get(k) == (True, b"new-%d" % k), \
+                "stale read: L0 recency must come from birth, not list order"
+
+
+def test_zero_capacity_cache_fires_no_evictions():
+    """Regression: insert() into a capacity<=0 cache fired on_evict for a
+    block that was never cached."""
+    evicted = []
+    bc = BlockCache(0, on_evict=lambda sid, blk: evicted.append((sid, blk)))
+    for i in range(16):
+        bc.insert(7, i)
+        assert not bc.get(7, i)
+    assert not evicted and len(bc) == 0
+
+
+def test_cacheless_config_emits_no_cache_hints():
+    """Integration for the same bug: with block_cache_blocks=0 under a
+    hint-driven scheme, reads must produce zero cache-hint traffic and
+    zero SSD cache admissions."""
+    sc = tiny_scenario()
+    sc = replace(sc, lsm=replace(sc.lsm, block_cache_blocks=0))
+    db = DB("HHZS", sc, store_values=True)
+    _load(db, 2000)
+    hints = []
+    orig = db.tree.block_cache.on_evict
+    db.tree.block_cache.on_evict = \
+        lambda sid, blk: (hints.append((sid, blk)), orig(sid, blk))
+    for k in range(0, 2000, 7):
+        assert db.get(k)[0]
+    db.drain()
+    assert not hints
+    assert db.backend.cache.admitted == 0
 
 
 def test_wal_group_commit_batches_writers():

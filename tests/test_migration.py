@@ -81,6 +81,37 @@ def test_rate_limit_paces_migration():
     assert elapsed >= expect * 0.9, "migration must respect the rate limit"
 
 
+def test_cache_hot_sst_counts_logical_reads():
+    """Regression: num_reads (the §3.4 popularity signal) was only
+    incremented on block-cache *misses*, so a fully cache-resident hot
+    SST looked cold and became the demotion victim.  Logical reads must
+    count whether or not the block cache absorbs the I/O."""
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    for k in range(64):
+        db.put(k, b"v%d" % k)
+    db.flush_all()
+    db.drain()
+    sst = next(s for lvl in db.tree.levels for s in lvl
+               if s.min_key <= 5 <= s.max_key)
+    base = sst.num_reads
+    dev_reads_before = db.ssd.counters.read_ops + db.hdd.counters.read_ops
+    for _ in range(50):
+        assert db.get(5) == (True, b"v5")
+    dev_reads = (db.ssd.counters.read_ops + db.hdd.counters.read_ops
+                 - dev_reads_before)
+    # the block cache absorbed almost everything...
+    assert dev_reads <= 2, "repeated point reads should be cache hits"
+    # ...yet every logical read counted toward popularity
+    assert sst.num_reads - base >= 50
+    # victim selection: the migrator must now demote an idle sibling,
+    # not the cache-hot SST (pre-fix the hot SST's rate was ~1/age and
+    # it lost SSD residency)
+    now = db.sim.now
+    idle = _sst(990, sst.level, reads=5, birth=sst.birth)
+    victim = max([sst, idle], key=lambda s: priority_key(s, now))
+    assert victim is idle
+
+
 def test_swap_hysteresis_blocks_marginal_swaps():
     db = DB("HHZS", tiny_scenario())
     be = db.backend
