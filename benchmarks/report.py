@@ -123,6 +123,10 @@ def storage_tables() -> str:
         out.append("### SLO attainment: debt-aware control plane "
                    "(bench_control)")
         out.append(sa)
+    sv = serving_table()
+    if sv:
+        out.append("### LLM KV-cache serving (bench_serving)")
+        out.append(sv)
     tl = timeline_table()
     if tl:
         out.append("### telemetry timelines (results/storage/timelines)")
@@ -142,7 +146,7 @@ def _grid_rows():
     column and render in their own pivot."""
     return [r for r in _scenario_rows()
             if "tenant" not in r and "fault" not in r
-            and "filter_bits" not in r
+            and "filter_bits" not in r and "tiering" not in r
             and r.get("workload") in set("ABCDEF")]
 
 
@@ -231,7 +235,7 @@ def scenario_matrix_table() -> str:
     found = False
     for r in _scenario_rows():
         if "tenant" in r or "fault" in r or "filter_bits" in r \
-                or r.get("workload") in set("ABCDEF"):
+                or "tiering" in r or r.get("workload") in set("ABCDEF"):
             continue
         found = True
         rows.append(
@@ -389,6 +393,49 @@ def slo_attainment_table() -> str:
             out.append(f"| {scheme} | {policy} "
                        f"| {prot[(scheme, policy)]*1e3:.1f} "
                        f"| {total[(scheme, policy)]:.1f} |")
+    return "\n".join(out)
+
+
+def _serving_rows():
+    """Serving rows: prefer the dedicated artifact, fall back to the
+    merged scenarios.json rows (``tiering`` marks the kind either way)."""
+    p = Path("results/storage/serving.json")
+    if p.exists():
+        return json.loads(p.read_text())
+    return [r for r in _scenario_rows() if "tiering" in r]
+
+
+def serving_table() -> str:
+    """Per-cell serving table from ``bench_serving`` (rows carrying a
+    ``tiering`` key): decode-step p50/p99, TTFT p99 vs the tenant SLO,
+    HBM hit rate and the migration traffic each tiering policy paid for
+    it.  Read the three policies of one (arrival, hbm) group against each
+    other: ``static`` sheds load to keep HBM-only latency, ``lru`` pages
+    blindly (high migration, decode stalls), ``hhzs`` uses the paper's
+    hints to keep hot sequences resident at a fraction of the traffic."""
+    rows = _serving_rows()
+    if not rows:
+        return ""
+    out = ["| cell | tiering | offered/s | admitted | shed | done "
+           "| ttft p99 s | slo | decode p50/p99 ms | hbm hit "
+           "| pg promo/demo | stalls |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r.get("cell", ""),)):
+        if r.get("slo_p99") is not None:
+            slo = "met" if r.get("slo_met") else "MISSED"
+        else:
+            slo = "—"
+        out.append(
+            f"| {r['cell']} | {r['tiering']} "
+            f"| {r['offered_rate']:.2f} "
+            f"| {int(r['admitted'])} | {int(r['rejected'])} "
+            f"| {int(r['n_completed'])} "
+            f"| {r['ttft_p']['p99']:.2f} | {slo} "
+            f"| {r['decode_p']['p50']*1e3:.1f}/"
+            f"{r['decode_p']['p99']*1e3:.1f} "
+            f"| {r['hbm_hit_rate']:.3f} "
+            f"| {int(r['promote_pages'])}/{int(r['demote_pages'])} "
+            f"| {int(r['preempt_stalls'])} |")
     return "\n".join(out)
 
 

@@ -651,6 +651,77 @@ def bench_control() -> List[str]:
     return rows
 
 
+def bench_serving() -> List[str]:
+    """LLM KV-cache serving grid: tiering policy x arrival process x HBM
+    pool size, all through the same sweep driver as the storage cells.
+
+    Each cell replays an open-loop chat trace (lognormal prompt/output
+    lengths, pause/resume churn) against a paged KV cache split across an
+    HBM pool and a host pool, under one of three placement policies:
+    ``static`` (HBM-only, reject what doesn't fit), ``lru`` (hint-blind
+    paging) and ``hhzs`` (the paper's write-guided placement + cold-only
+    migration + eviction-driven prefix caching, transplanted to the
+    KV-cache tiering problem).  Rows publish to
+    ``results/storage/serving.json`` and merge into scenarios.json; the
+    bench asserts the paper's claim at serving granularity — in *every*
+    cell the hinted policy beats hint-blind LRU on decode p99 or HBM hit
+    rate."""
+    from repro.workloads.serving import build_serving_grid
+    from repro.workloads.sweep import run_sweep
+
+    matrix = build_serving_grid(
+        policies=("static", "lru", "hhzs"),
+        arrival_kinds=("poisson", "bursty"),
+        hbm_zones=(10, 16),
+        rate=2.5, duration=400.0, warmup=40.0, seed=1,
+        telemetry=True, timeline_dir=RESULTS / "timelines")
+    data = run_sweep(matrix, out=None, workers=2, resume=False,
+                     verbose=False)
+    from benchmarks.validate_results import validate_rows
+    validate_rows(data, "serving.json", strict=True)
+    (RESULTS / "serving.json").write_text(json.dumps(data, indent=1))
+    _merge_scenarios(data, replaces=lambda r: "tiering" in r)
+
+    by_cell: Dict = {}
+    for r in data:
+        key = (r["workload"], r["arrival"], r["hbm_zones"])
+        by_cell.setdefault(key, {})[r["tiering"]] = r
+    rows = []
+    for r in data:
+        rows.append(_row(
+            f"serving_{r['cell']}",
+            r["decode_p"]["p99"] * 1e6,
+            f"offered={r['offered_rate']:.2f}/s"
+            f";admitted={int(r['admitted'])}"
+            f";shed={int(r['rejected'])}"
+            f";ttft_p99={r['ttft_p']['p99']:.2f}s"
+            f";decode_p99={r['decode_p']['p99']*1e3:.2f}ms"
+            f";hbm_hit={r['hbm_hit_rate']:.3f}"
+            f";migrated_mb={r['migrated_bytes']/MiB:.1f}"
+            f";stalls={int(r['preempt_stalls'])}"))
+    for key, pol in sorted(by_cell.items()):
+        if "hhzs" not in pol or "lru" not in pol:
+            continue
+        h, l = pol["hhzs"], pol["lru"]
+        wins_p99 = h["decode_p"]["p99"] < l["decode_p"]["p99"]
+        wins_hit = h["hbm_hit_rate"] > l["hbm_hit_rate"]
+        rows.append(_row(
+            f"serving_hinted_vs_lru_{key[1].split('(')[0]}_h{key[2]}", 0.0,
+            f"decode_p99x="
+            f"{h['decode_p']['p99']/max(l['decode_p']['p99'], 1e-12):.3f}"
+            f";hitx={h['hbm_hit_rate']/max(l['hbm_hit_rate'], 1e-12):.3f}"
+            f";migratedx={h['migrated_bytes']/max(l['migrated_bytes'], 1):.3f}"
+            f";win={'p99' if wins_p99 else 'hit' if wins_hit else 'NONE'}"))
+        if not (wins_p99 or wins_hit):
+            raise RuntimeError(
+                f"serving acceptance violated in cell {key}: hinted hhzs "
+                f"beats LRU on neither decode p99 "
+                f"({h['decode_p']['p99']:.4f} vs {l['decode_p']['p99']:.4f})"
+                f" nor HBM hit rate ({h['hbm_hit_rate']:.3f} vs "
+                f"{l['hbm_hit_rate']:.3f})")
+    return rows
+
+
 ALL = {
     "table1": bench_table1,
     "fig2": bench_fig2,
@@ -665,6 +736,7 @@ ALL = {
     "multitenant": bench_multitenant,
     "faults": bench_faults,
     "control": bench_control,
+    "serving": bench_serving,
 }
 
 

@@ -1,8 +1,9 @@
 """Schema linter for the scenario-row artifacts in ``results/storage/``.
 
-``results/storage/scenarios.json`` accumulates rows from three different
-sweeps — single-stream open-loop cells, per-tenant admission-control rows
-and fault-injection rows — and PRs 2-3 established the merge-never-
+``results/storage/scenarios.json`` accumulates rows from four different
+sweeps — single-stream open-loop cells, per-tenant admission-control rows,
+fault-injection rows and LLM-serving rows — and PRs 2-3 established the
+merge-never-
 overwrite invariant: each producer replaces exactly its own rows and keeps
 everything else.  That invariant is easy to break silently (a bench that
 rewrites the file drops another sweep's rows; a driver bug duplicates a
@@ -53,6 +54,22 @@ BASE_COLUMNS = (
 )
 TENANT_COLUMNS = ("tenant", "policy", "protected", "admission")
 FAULT_COLUMNS = ("fault", "availability")
+# serving rows (repro.workloads.serving) are a fourth shape: no storage
+# scheme / latency decomposition, but TTFT + decode-gap percentiles and
+# KV-tier traffic columns instead
+SERVING_COLUMNS = (
+    "workload", "arrival", "tiering", "serving_tenant", "cell",
+    "admission", "n_arrived", "admitted", "rejected", "n_completed",
+    "n_measured", "duration", "offered_rate", "throughput",
+    "token_throughput", "tokens_out", "ttft_p", "decode_p",
+    "hbm_hit_rate", "promote_pages", "demote_pages", "migrated_bytes",
+    "preempt_stalls", "pauses", "hbm_zones", "host_zones", "max_batch",
+)
+SERVING_NUMERIC = ("n_arrived", "admitted", "rejected", "n_completed",
+                   "n_measured", "duration", "offered_rate", "throughput",
+                   "token_throughput", "tokens_out", "promote_pages",
+                   "demote_pages", "migrated_bytes", "preempt_stalls",
+                   "pauses", "hbm_zones", "host_zones", "max_batch")
 
 # row-count columns that must be non-negative finite numbers
 NUMERIC_COLUMNS = ("n_arrived", "n_measured", "duration", "offered_rate",
@@ -61,7 +78,13 @@ NUMERIC_COLUMNS = ("n_arrived", "n_measured", "duration", "offered_rate",
 
 
 def row_kind(row: Dict) -> str:
-    """Discriminate the three row kinds sharing scenarios.json."""
+    """Discriminate the four row kinds sharing scenarios.json.
+
+    Serving rows are checked first: a multi-tenant serving run carries
+    per-tenant columns too, and must not be mistaken for a storage
+    tenant row (whose required columns it does not have)."""
+    if "tiering" in row:
+        return "serving"
     if "tenant" in row:
         return "tenant"
     if "fault" in row:
@@ -81,6 +104,56 @@ def _check_pct(errors: List[str], where: str, name: str, d) -> None:
            or v < 0]
     if bad:
         errors.append(f"{where}: {name} non-finite/negative at {bad}")
+
+
+def _check_serving(errors: List[str], where: str, row: Dict) -> None:
+    missing = [c for c in SERVING_COLUMNS if c not in row]
+    if missing:
+        errors.append(f"{where}: missing columns {missing}")
+        return
+    for col in SERVING_NUMERIC:
+        v = row[col]
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v < 0:
+            errors.append(f"{where}: {col}={v!r} not a non-negative "
+                          f"finite number")
+    for name in ("ttft_p", "decode_p"):
+        _check_pct(errors, where, name, row[name])
+    hr = row["hbm_hit_rate"]
+    if not isinstance(hr, (int, float)) or not 0 <= hr <= 1:
+        errors.append(f"{where}: hbm_hit_rate={hr!r} not in [0,1]")
+    if row["n_arrived"] != row["admitted"] + row["rejected"]:
+        errors.append(
+            f"{where}: serving conservation violated: "
+            f"n_arrived={row['n_arrived']} != admitted+rejected="
+            f"{row['admitted'] + row['rejected']}")
+    a = row["admission"]
+    if not isinstance(a, dict):
+        errors.append(f"{where}: admission must be an object")
+    else:
+        need = ("arrived", "admitted", "rejected", "holding")
+        if all(k in a for k in need):
+            if a["arrived"] != a["admitted"] + a["rejected"] + a["holding"]:
+                errors.append(
+                    f"{where}: admission conservation violated: "
+                    f"arrived={a['arrived']} != admitted+rejected+holding="
+                    f"{a['admitted'] + a['rejected'] + a['holding']}")
+        else:
+            errors.append(f"{where}: admission missing "
+                          f"{[k for k in need if k not in a]}")
+    slo = row.get("slo_p99")
+    if slo is not None:
+        if not isinstance(slo, (int, float)) or not math.isfinite(slo) \
+                or slo <= 0:
+            errors.append(f"{where}: slo_p99={slo!r} not a positive "
+                          f"finite number")
+        if not isinstance(row.get("slo_met"), bool):
+            errors.append(f"{where}: slo_p99 rows must carry a boolean "
+                          f"slo_met")
+    g = row.get("goodput")
+    if g is not None and (not isinstance(g, (int, float))
+                          or not math.isfinite(g) or g < 0):
+        errors.append(f"{where}: goodput={g!r} not a non-negative "
+                      f"finite number")
 
 
 def validate_rows(rows, path: str = "<rows>",
@@ -104,6 +177,17 @@ def validate_rows(rows, path: str = "<rows>",
             continue
         kind = row_kind(row)
         where = f"{where}({kind}:{row.get('cell', '?')})"
+        if kind == "serving":
+            _check_serving(errors, where, row)
+            key = (row.get("cell"),
+                   row.get("tenant") or row.get("serving_tenant"))
+            if key in seen:
+                errors.append(
+                    f"{where}: duplicate cell key {key} (first at row "
+                    f"{seen[key]}) — a merge overwrote or double-appended")
+            else:
+                seen[key] = i
+            continue
         required = BASE_COLUMNS + (
             TENANT_COLUMNS if kind == "tenant"
             else FAULT_COLUMNS if kind == "fault" else ())
@@ -252,7 +336,7 @@ def validate_file(path: Path) -> List[str]:
 
 
 DEFAULT_TARGETS = ("scenarios.json", "multitenant.json", "faults.json",
-                   "control.json", "filters.json")
+                   "control.json", "filters.json", "serving.json")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:

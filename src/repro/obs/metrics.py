@@ -117,6 +117,17 @@ class MetricsRegistry:
             name = f"_anon{self._anon}"
         self._collectors[name] = (fn, rate)
 
+    def attach_dict(self, d: Dict[str, float], prefix: str = "",
+                    rate: bool = False,
+                    name: Optional[str] = None) -> None:
+        """Register a plain counter dict (e.g. a manager's ``stats``) as a
+        collector: each key becomes a ``prefix + key`` series, sampled by
+        reference so later mutations are visible.  With ``rate=True`` the
+        series hold windowed per-second deltas (monotonic counters)."""
+        self.collector(
+            lambda: {prefix + k: float(v) for k, v in d.items()},
+            rate=rate, name=name)
+
     # -- sampling -------------------------------------------------------
     def _store(self, values: Dict[str, float], now: float) -> None:
         n = len(self._t)

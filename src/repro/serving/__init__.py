@@ -1,6 +1,11 @@
 from .paged_kv import PagedPool, KVZone
 from .tiering import HHZSKVManager, SeqKV
+from .policies import (POLICIES, LRUKVManager, StaticHBMManager,
+                       make_manager)
+# the real model-driven engine needs jax; everything above (pools, tier
+# managers, policies, the sim serving path) runs on numpy alone
 from .engine import ServingEngine, Request
 
 __all__ = ["PagedPool", "KVZone", "HHZSKVManager", "SeqKV",
+           "POLICIES", "LRUKVManager", "StaticHBMManager", "make_manager",
            "ServingEngine", "Request"]

@@ -16,13 +16,17 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+try:                                    # the real engine needs jax; the
+    import jax                          # sim serving path (workloads/
+    import jax.numpy as jnp             # serving.py) does not
+    from ..models import layers as L
+    from ..models import model as M
+except ImportError:                     # pragma: no cover - no-jax CI leg
+    jax = None
+
 from ..config import ModelConfig
-from ..models import layers as L
-from ..models import model as M
 from .paged_kv import PagedPool
 from .tiering import HHZSKVManager
 
@@ -47,6 +51,9 @@ class ServingEngine:
                  pages_per_zone: int = 4, page_size: int = 16,
                  max_batch: int = 4, cache_zones: int = 1,
                  use_kernel: bool = False, seed: int = 0):
+        if jax is None:
+            raise RuntimeError("ServingEngine requires jax; the jax-free "
+                               "serving path is repro.workloads.serving")
         assert cfg.family in ("dense",), "engine demo supports dense archs"
         self.cfg = cfg
         self.params = params

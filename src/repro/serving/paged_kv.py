@@ -14,14 +14,28 @@ The HHZS -> TPU mapping (DESIGN.md §Hardware-adaptation):
 Pools hold stacked per-layer pages [L, P, page_size, KV, D].  The host tier
 is numpy (pageable host RAM); promotion/demotion copies zones between
 tiers, modelling the d2h/h2d DMA a real TPU serving stack issues.
+
+Two knobs added for the scenario pipeline:
+
+* jax is optional — without it the device tier falls back to numpy (the
+  simulation is bit-identical; only the array backend changes), so the
+  serving correctness suite runs honestly on the no-jax CI leg;
+* ``materialize=False`` builds an accounting-only pool: zones, write
+  pointers, byte counters and conservation invariants all behave exactly
+  as with real arrays, but no tensor data is stored or copied — what the
+  open-loop serving grid uses (thousands of sequences per cell).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-import jax.numpy as jnp
 import numpy as np
+
+try:                                    # optional: no-jax CI leg / grid runs
+    import jax.numpy as jnp
+except ImportError:                     # pragma: no cover - exercised in CI
+    jnp = None
 
 
 @dataclass
@@ -40,13 +54,18 @@ class PagedPool:
 
     def __init__(self, name: str, num_layers: int, num_zones: int,
                  pages_per_zone: int, page_size: int, kv_heads: int,
-                 head_dim: int, host: bool):
+                 head_dim: int, host: bool, materialize: bool = True):
         self.name = name
         self.page_size = page_size
         self.pages_per_zone = pages_per_zone
         self.num_pages = num_zones * pages_per_zone
+        # bytes of one token's K+V across all layers (float32 K and V)
+        self.token_bytes = num_layers * kv_heads * head_dim * 4 * 2
+        self.materialize = materialize
         shape = (num_layers, self.num_pages, page_size, kv_heads, head_dim)
-        if host:
+        if not materialize:
+            self.k = self.v = None
+        elif host or jnp is None:
             self.k = np.zeros(shape, np.float32)
             self.v = np.zeros(shape, np.float32)
         else:
@@ -69,46 +88,90 @@ class PagedPool:
         if not self._free:
             return None
         z = self.zones[self._free.pop(0)]
+        if z.owner is not None:
+            raise RuntimeError(
+                f"{self.name}: free-list zone {z.zid} still owned by "
+                f"{z.owner} — zone accounting corrupted")
         z.owner = owner
         z.write_ptr = 0
         return z
 
     def reset_zone(self, zone: KVZone) -> None:
-        """Zone reset: write pointer to start, space reclaimed at once."""
+        """Zone reset: write pointer to start, space reclaimed at once.
+
+        Double-resetting a zone would put it on the free list twice and
+        hand it to two owners later — raise instead (the symptom of a
+        tier-manager bookkeeping bug, not a recoverable condition).
+        """
+        if zone.owner is None:
+            raise RuntimeError(
+                f"{self.name}: zone {zone.zid} reset twice (already free)")
         zone.owner = None
         zone.write_ptr = 0
         self._free.append(zone.zid)
 
     # ------------------------------------------------------------------
-    def write_token(self, zone: KVZone, layer_k, layer_v) -> int:
+    def write_token(self, zone: KVZone, layer_k=None, layer_v=None) -> int:
         """Append one token's [L, KV, D] K/V at the zone write pointer.
-        Returns the global (page, slot) encoded position."""
+        Returns the global (page, slot) encoded position.  On an
+        accounting-only pool (``materialize=False``) the tensors may be
+        omitted; only pointers and byte counters advance."""
         assert zone.remaining(self.page_size) > 0
         idx = zone.write_ptr
         page = zone.pages[idx // self.page_size]
         slot = idx % self.page_size
-        if self.host:
-            self.k[:, page, slot] = np.asarray(layer_k)
-            self.v[:, page, slot] = np.asarray(layer_v)
-        else:
-            self.k = self.k.at[:, page, slot].set(layer_k)
-            self.v = self.v.at[:, page, slot].set(layer_v)
+        if self.materialize:
+            if layer_k is None or layer_v is None:
+                raise ValueError("materialized pool needs K/V tensors")
+            if isinstance(self.k, np.ndarray):
+                self.k[:, page, slot] = np.asarray(layer_k)
+                self.v[:, page, slot] = np.asarray(layer_v)
+            else:
+                self.k = self.k.at[:, page, slot].set(layer_k)
+                self.v = self.v.at[:, page, slot].set(layer_v)
         zone.write_ptr += 1
-        self.bytes_written += layer_k.size * 4 * 2
+        self.bytes_written += self.token_bytes
         return page * self.page_size + slot
+
+    def read_token(self, zone: KVZone, idx: int):
+        """Read back one written token's (K, V) ([L, KV, D] each) — the
+        materialized-pool verification path of the serving differential."""
+        if not self.materialize:
+            raise ValueError("accounting-only pool holds no data")
+        if not 0 <= idx < zone.write_ptr:
+            raise IndexError(f"token {idx} not written (ptr={zone.write_ptr})")
+        page = zone.pages[idx // self.page_size]
+        slot = idx % self.page_size
+        return (np.asarray(self.k[:, page, slot]),
+                np.asarray(self.v[:, page, slot]))
 
     def copy_zone_from(self, other: "PagedPool", src: KVZone,
                        dst: KVZone) -> int:
-        """Migrate a zone's pages between tiers. Returns bytes moved."""
+        """Migrate a zone's written tokens between tiers. Returns bytes
+        moved.  Only pages covered by the source write pointer move (a
+        partially-filled zone does not pay for — or corrupt — its empty
+        tail), and the destination must have room for the written span."""
+        if self.page_size != other.page_size:
+            raise ValueError(
+                f"page-size mismatch: {self.name}={self.page_size} "
+                f"vs {other.name}={other.page_size}")
+        if src.write_ptr > len(dst.pages) * self.page_size:
+            raise ValueError(
+                f"zone copy overflow: {src.write_ptr} tokens into "
+                f"{len(dst.pages)}x{self.page_size}-token zone")
+        n_pages = -(-src.write_ptr // self.page_size)   # ceil
         moved = 0
-        for i, (sp, dp) in enumerate(zip(src.pages, dst.pages)):
-            if self.host:
-                self.k[:, dp] = np.asarray(other.k[:, sp])
-                self.v[:, dp] = np.asarray(other.v[:, sp])
-            else:
-                self.k = self.k.at[:, dp].set(jnp.asarray(other.k[:, sp]))
-                self.v = self.v.at[:, dp].set(jnp.asarray(other.v[:, sp]))
-            moved += other.k[:, sp].size * 4 * 2
+        for i in range(n_pages):
+            sp, dp = src.pages[i], dst.pages[i]
+            if self.materialize and other.materialize:
+                if isinstance(self.k, np.ndarray):
+                    self.k[:, dp] = np.asarray(other.k[:, sp])
+                    self.v[:, dp] = np.asarray(other.v[:, sp])
+                else:
+                    self.k = self.k.at[:, dp].set(jnp.asarray(other.k[:, sp]))
+                    self.v = self.v.at[:, dp].set(jnp.asarray(other.v[:, sp]))
+            tokens = min(self.page_size, src.write_ptr - i * self.page_size)
+            moved += tokens * other.token_bytes
         dst.write_ptr = src.write_ptr
         other.bytes_read += moved
         self.bytes_written += moved

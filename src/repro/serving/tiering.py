@@ -73,17 +73,34 @@ class HHZSKVManager:
         self.migration_budget = migration_zone_budget_per_step
         self.stats = {"demotions": 0, "promotions": 0, "cache_admits": 0,
                       "cache_hits": 0, "bytes_migrated": 0,
-                      "hbm_placements": 0, "host_placements": 0}
+                      "hbm_placements": 0, "host_placements": 0,
+                      "demote_pages": 0, "promote_pages": 0,
+                      "preempt_stalls": 0}
 
     # ------------------------------------------------------------------
     # hints
     # ------------------------------------------------------------------
+    def admit(self, sid: int, total_tokens: int) -> bool:
+        """Capacity admission hook: may this sequence (prompt + budgeted
+        output, ``total_tokens``) enter at all?  The tiered policies always
+        admit — host capacity backs the overflow; the static HBM-only
+        baseline overrides this with a reject-on-full check."""
+        return True
+
     def on_prefill(self, sid: int, tokens: int) -> SeqKV:
-        """Flush hint: a new KV segment appears."""
+        """Flush hint: a new KV segment appears.
+
+        Write-guided placement (§3.3): the incoming sequence is *hot* (it
+        decodes immediately), so the fast tier is cleared for it by
+        demoting cold residents — never active ones — until its demand
+        fits.  Only when no cold victim remains does the prefill land on
+        the slow tier."""
         seq = SeqKV(sid=sid, last_active_step=self.step)
         self.seqs[sid] = seq
-        # write-guided placement: HBM while demand fits
         need = self._zones_for(tokens)
+        while self.hbm.num_free() < need + self._active_demand() \
+                and self._demote_one(exclude=sid, cold_only=True):
+            pass
         if self.hbm.num_free() >= need + self._active_demand():
             seq.tier = "hbm"
             self.stats["hbm_placements"] += 1
@@ -145,27 +162,49 @@ class HHZSKVManager:
             if sid in self.seqs:
                 self.seqs[sid].last_active_step = self.step
         budget = self.migration_budget
-        # popularity migration: promote active host-resident sequences
+        # popularity migration: promote active host-resident sequences —
+        # into free slack, or by displacing *cold* residents only.  The
+        # hint keeps a promotion from evicting another active sequence
+        # (the ping-pong a hint-blind pager pays; cf. LRUKVManager.tick)
         for sid in active_sids:
             seq = self.seqs.get(sid)
             if seq is None or seq.tier != "host" or budget <= 0:
                 continue
+            while self.hbm.num_free() < len(seq.zones) \
+                    and self._demote_one(exclude=sid, cold_only=True):
+                pass
             if self.hbm.num_free() >= len(seq.zones):
                 budget -= self._promote(seq)
-            elif self._demote_one(exclude=sid):
-                budget -= self._promote(seq)
 
-    def _demote_one(self, exclude: int) -> bool:
+    def _victim_key(self, s: SeqKV):
+        """Demotion victim ordering (max wins).  The hinted policy uses the
+        paper's hint vocabulary — coldest first, then deepest length bucket
+        (short sequences are cheap to keep hot); the LRU baseline overrides
+        this with pure recency."""
+        return s.priority_key(self.step)
+
+    def _demote_one(self, exclude: int, cold_only: bool = False) -> bool:
         cands = [s for s in self.seqs.values()
-                 if s.tier == "hbm" and s.sid != exclude and s.zones]
+                 if s.tier == "hbm" and s.sid != exclude and s.zones
+                 and not (cold_only
+                          and s.last_active_step >= self.step)]
         if not cands:
             return False
-        victim = max(cands, key=lambda s: s.priority_key(self.step))
+        victim = max(cands, key=self._victim_key)
+        if victim.last_active_step >= self.step:
+            # evicting a sequence that decoded this very step: the next
+            # decode of that sequence stalls on host-resident KV
+            self.stats["preempt_stalls"] += 1
         self._seq_to_host(victim)
         self.stats["demotions"] += 1
         return True
 
     def _seq_to_host(self, seq: SeqKV) -> None:
+        # hinted caching first (≙ §3.5 eviction-driven admission): the
+        # prefix must be copied while its HBM zones still hold valid data —
+        # admitting after the reset below would cache an empty zone and
+        # read from freed pages
+        self._cache_admit(seq)
         new_zones = []
         for z in seq.zones:
             dz = self.host.alloc_zone(seq.sid)
@@ -173,32 +212,34 @@ class HHZSKVManager:
                 raise RuntimeError("host KV pool exhausted")
             self.stats["bytes_migrated"] += \
                 self.host.copy_zone_from(self.hbm, z, dz)
+            self.stats["demote_pages"] += len(z.pages)
             self.hbm.reset_zone(z)
             new_zones.append(dz)
-        # hinted caching: admit the prefix (attention sink) pages
-        self._cache_admit(seq)
         seq.zones = new_zones
         seq.tier = "host"
 
     def _promote(self, seq: SeqKV) -> int:
-        moved = 0
+        # all-or-nothing: reserve every destination zone before touching a
+        # single source zone, so an abort cannot strand a live sequence
+        # pointing at freed host zones (partial-promotion data loss)
         new_zones = []
-        for z in seq.zones:
+        for _ in seq.zones:
             dz = self.hbm.alloc_zone(seq.sid)
-            if dz is None:          # partial promotion not allowed: abort
+            if dz is None:
                 for nz in new_zones:
                     self.hbm.reset_zone(nz)
                 return 0
+            new_zones.append(dz)
+        for z, dz in zip(seq.zones, new_zones):
             self.stats["bytes_migrated"] += \
                 self.hbm.copy_zone_from(self.host, z, dz)
+            self.stats["promote_pages"] += len(z.pages)
             self.host.reset_zone(z)
-            new_zones.append(dz)
-            moved += 1
         seq.zones = new_zones
         seq.tier = "hbm"
         self.stats["promotions"] += 1
         self._cache_drop(seq.sid)   # resident again: cached copy redundant
-        return max(moved, 1)
+        return max(len(new_zones), 1)
 
     # ------------------------------------------------------------------
     # prefix caching (≙ §3.5)
@@ -208,10 +249,17 @@ class HHZSKVManager:
                 or not seq.zones:
             return
         if len(self.prefix_cache) >= len(self.cache_pool):
-            # FIFO zone eviction
+            # FIFO zone eviction: the new entry takes over the *evicted*
+            # entry's zone — indexing by occupancy here would overwrite a
+            # zone another cached sequence still maps (cache collision)
             old = self._cache_fifo.pop(0)
-            self.prefix_cache.pop(old, None)
-        zone = self.cache_pool[len(self.prefix_cache) % len(self.cache_pool)]
+            zone = self.prefix_cache.pop(old)
+            old_seq = self.seqs.get(old)
+            if old_seq is not None:
+                old_seq.prefix_cached = False
+        else:
+            used = {z.zid for z in self.prefix_cache.values()}
+            zone = next(z for z in self.cache_pool if z.zid not in used)
         self.hbm.copy_zone_from(self.hbm, seq.zones[0], zone)
         self.prefix_cache[seq.sid] = zone
         self._cache_fifo.append(seq.sid)
@@ -223,12 +271,26 @@ class HHZSKVManager:
             self.prefix_cache.pop(sid)
             if sid in self._cache_fifo:
                 self._cache_fifo.remove(sid)
+            seq = self.seqs.get(sid)
+            if seq is not None:
+                seq.prefix_cached = False
 
     def cache_lookup(self, sid: int) -> Optional[KVZone]:
         z = self.prefix_cache.get(sid)
         if z is not None:
             self.stats["cache_hits"] += 1
         return z
+
+    def residency(self, seq: SeqKV) -> Tuple[int, int]:
+        """(hbm_tokens, host_tokens) a full attention read of this sequence
+        touches right now.  For a host-resident sequence the cached prefix
+        zone (if any) serves its span at HBM speed — the §3.5 payoff the
+        serving cost model charges for."""
+        if seq.tier == "hbm":
+            return seq.length, 0
+        cz = self.cache_lookup(seq.sid)
+        cached = min(cz.write_ptr, seq.length) if cz is not None else 0
+        return cached, seq.length - cached
 
     # ------------------------------------------------------------------
     def release(self, sid: int) -> None:

@@ -7,9 +7,15 @@ from .runner import (ArrivalProcess, PoissonArrivals, BurstyArrivals,
                      OpenLoopResult, run_open_loop,
                      TenantSpec, MultiTenantResult, run_multi_tenant,
                      ScenarioCell, MultiTenantCell, ScenarioMatrix)
+from .serving import (ServingWorkload, ServingPool, ServingCosts,
+                      ServingCell, ServingResult, run_serving,
+                      serving_arrivals, build_serving_grid)
 # NOTE: the sweep driver (repro.workloads.sweep) is imported explicitly,
 # not re-exported here — it doubles as `python -m repro.workloads.sweep`
 # and importing it at package load would shadow that entry point.
+# repro.workloads.serving is ALSO a `-m` entry point, but its module body
+# only defines the grid (main() runs under __main__), so re-exporting the
+# specs here is safe.
 
 __all__ = [
     "YCSB", "WorkloadSpec", "WorkloadResult", "Ops", "OpStream",
@@ -21,4 +27,7 @@ __all__ = [
     "OpenLoopResult", "run_open_loop",
     "TenantSpec", "MultiTenantResult", "run_multi_tenant",
     "ScenarioCell", "MultiTenantCell", "ScenarioMatrix",
+    "ServingWorkload", "ServingPool", "ServingCosts", "ServingCell",
+    "ServingResult", "run_serving", "serving_arrivals",
+    "build_serving_grid",
 ]

@@ -1079,6 +1079,15 @@ class ScenarioMatrix:
     # timeline_dir each cell also dumps its timeline artifact there
     telemetry: Union[bool, float] = False
     timeline_dir: Optional[Union[str, Path]] = None
+    # serving scenario family (repro.workloads.serving): non-empty
+    # serving_policies adds one ServingCell per policy x serving_workload
+    # x arrival x serving_pool — KV-cache tiering policies selectable the
+    # way storage schemes are
+    serving_policies: Sequence[str] = ()
+    serving_workloads: Sequence[object] = ()      # ServingWorkload
+    serving_pools: Sequence[object] = ()          # ServingPool
+    serving_admission: Union[str, AdmissionConfig, None] = None
+    serving_costs: Optional[object] = None        # ServingCosts
     results: List[OpenLoopResult] = field(default_factory=list)
 
     def _workload_spec(self, w) -> WorkloadSpec:
@@ -1089,6 +1098,21 @@ class ScenarioMatrix:
             return self.arrivals[spec.name]
         return self.arrivals
 
+    def _serving_cells(self) -> List:
+        if not self.serving_policies:
+            return []
+        from .serving import ServingCell, ServingPool, ServingWorkload
+        wls = self.serving_workloads or (ServingWorkload(),)
+        pools = self.serving_pools or (ServingPool(),)
+        if isinstance(self.arrivals, Mapping):
+            raise ValueError("serving cells need a flat arrival list, "
+                             "not a per-workload mapping")
+        return [ServingCell(p, w, a, sp)
+                for p in self.serving_policies
+                for w in wls
+                for a in self.arrivals
+                for sp in pools]
+
     def cells(self) -> List[Union[ScenarioCell, MultiTenantCell]]:
         if self.tenants:
             return [MultiTenantCell(s, tuple(mix), pol, z, f)
@@ -1096,14 +1120,14 @@ class ScenarioMatrix:
                     for mix in self.tenants
                     for pol in self.policies
                     for z in self.ssd_zone_budgets
-                    for f in self.faults]
+                    for f in self.faults] + self._serving_cells()
         return [ScenarioCell(s, w, a, z, f, fb)
                 for s in self.schemes
                 for w in map(self._workload_spec, self.workloads)
                 for a in self._arrivals_of(w)
                 for z in self.ssd_zone_budgets
                 for f in self.faults
-                for fb in self.filter_bits]
+                for fb in self.filter_bits] + self._serving_cells()
 
     def _fresh_db(self, scheme: str, ssd_zones: int,
                   filter_bits: Optional[int] = None):
@@ -1138,6 +1162,9 @@ class ScenarioMatrix:
         Returns the per-(sub)run results plus their JSON rows (one per
         tenant for multi-tenant cells, else exactly one).
         """
+        from .serving import ServingCell, run_matrix_cell
+        if isinstance(cell, ServingCell):
+            return run_matrix_cell(self, cell)
         db = self._fresh_db(cell.scheme, cell.ssd_zones,
                             getattr(cell, "filter_bits", None))
         n_keys = getattr(db, "n_keys",

@@ -192,9 +192,12 @@ def run_sweep(matrix: ScenarioMatrix,
         checkpoint()
         if verbose:
             for r in rows:
+                # serving rows carry decode_p where storage rows carry
+                # latency_p — the note line is kind-agnostic
+                lat = r.get("latency_p") or r.get("decode_p") or {}
                 print(f"[sweep {idx + 1}/{len(all_cells)}] {r['cell']:<48s} "
                       f"thpt={r['throughput']:8.1f}/s "
-                      f"p99={r['latency_p'].get('p99', 0) * 1e3:9.2f}ms",
+                      f"p99={lat.get('p99', 0) * 1e3:9.2f}ms",
                       flush=True)
 
     skipped_budget = 0
