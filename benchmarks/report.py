@@ -123,6 +123,11 @@ def storage_tables() -> str:
         out.append("### SLO attainment: debt-aware control plane "
                    "(bench_control)")
         out.append(sa)
+    sh = sharding_table()
+    if sh:
+        out.append("### sharded cluster: scaling, rebalancing, "
+                   "per-shard faults (bench_sharding)")
+        out.append(sh)
     sv = serving_table()
     if sv:
         out.append("### LLM KV-cache serving (bench_serving)")
@@ -147,7 +152,15 @@ def _grid_rows():
     return [r for r in _scenario_rows()
             if "tenant" not in r and "fault" not in r
             and "filter_bits" not in r and "tiering" not in r
+            and "shards" not in r and "shard" not in r
             and r.get("workload") in set("ABCDEF")]
+
+
+def _fmt_group(vals, fmt) -> str:
+    """Render a pivot entry that may hold several rows' values: a lone
+    value renders plainly, several render joined — grouping instead of
+    silently overwriting when rows share a pivot key."""
+    return " / ".join(fmt(v) for v in vals)
 
 
 def _arrival_kind(name: str) -> str:
@@ -171,7 +184,8 @@ def grid_throughput_pivot() -> str:
     groups = {}
     for r in grid:
         groups.setdefault((_arrival_kind(r["arrival"]), r["ssd_zones"]),
-                          {})[(r["scheme"], r["workload"])] = r["throughput"]
+                          {}).setdefault(
+            (r["scheme"], r["workload"]), []).append(r["throughput"])
     out = []
     for (kind, z), cells in sorted(groups.items()):
         schemes = _scheme_order({s for s, _ in cells})
@@ -181,7 +195,8 @@ def grid_throughput_pivot() -> str:
         out.append("| scheme | " + " | ".join(workloads) + " |")
         out.append("|---" * (len(workloads) + 1) + "|")
         for s in schemes:
-            vals = [f"{cells[(s, w)]:.1f}" if (s, w) in cells else "—"
+            vals = [_fmt_group(cells[(s, w)], "{:.1f}".format)
+                    if (s, w) in cells else "—"
                     for w in workloads]
             out.append(f"| {s} | " + " | ".join(vals) + " |")
         out.append("")
@@ -200,9 +215,9 @@ def grid_tail_heatmap() -> str:
         return ""
     groups = {}
     for r in grid:
-        groups.setdefault(r["ssd_zones"], {})[
-            (r["scheme"], r["workload"])] = (
-                r["queue_p"]["p99"] * 1e3, r["service_p"]["p99"] * 1e3)
+        groups.setdefault(r["ssd_zones"], {}).setdefault(
+            (r["scheme"], r["workload"]), []).append(
+                (r["queue_p"]["p99"] * 1e3, r["service_p"]["p99"] * 1e3))
     out = []
     for z, cells in sorted(groups.items()):
         schemes = _scheme_order({s for s, _ in cells})
@@ -215,8 +230,9 @@ def grid_tail_heatmap() -> str:
             vals = []
             for w in workloads:
                 if (s, w) in cells:
-                    q, sv = cells[(s, w)]
-                    vals.append(f"{q:.0f}/{sv:.0f}")
+                    vals.append(_fmt_group(
+                        cells[(s, w)],
+                        lambda e: f"{e[0]:.0f}/{e[1]:.0f}"))
                 else:
                     vals.append("—")
             out.append(f"| {s} | " + " | ".join(vals) + " |")
@@ -235,7 +251,8 @@ def scenario_matrix_table() -> str:
     found = False
     for r in _scenario_rows():
         if "tenant" in r or "fault" in r or "filter_bits" in r \
-                or "tiering" in r or r.get("workload") in set("ABCDEF"):
+                or "tiering" in r or "shards" in r or "shard" in r \
+                or r.get("workload") in set("ABCDEF"):
             continue
         found = True
         rows.append(
@@ -293,7 +310,8 @@ def filter_sweep_table() -> str:
     for r in rows:
         probes = r["extras"].get("filter_probes", 0)
         fp = r["extras"].get("bloom_fp", 0) / probes if probes else 0.0
-        cells[(r["scheme"], int(r["filter_bits"]))] = (r["throughput"], fp)
+        cells.setdefault((r["scheme"], int(r["filter_bits"])),
+                         []).append((r["throughput"], fp))
     schemes = _scheme_order({s for s, _ in cells})
     bits = sorted({b for _, b in cells})
     out = ["(entries: throughput ops/s / measured FP per probe)",
@@ -303,8 +321,9 @@ def filter_sweep_table() -> str:
         vals = []
         for b in bits:
             if (s, b) in cells:
-                t, fp = cells[(s, b)]
-                vals.append(f"{t:.1f} / {fp:.4f}")
+                vals.append(_fmt_group(
+                    cells[(s, b)],
+                    lambda e: f"{e[0]:.1f} ({e[1]:.4f}fp)"))
             else:
                 vals.append("—")
         out.append(f"| {s} | " + " | ".join(vals) + " |")
@@ -394,6 +413,57 @@ def slo_attainment_table() -> str:
                        f"| {prot[(scheme, policy)]*1e3:.1f} "
                        f"| {total[(scheme, policy)]:.1f} |")
     return "\n".join(out)
+
+
+def _sharding_rows():
+    """Sharded-cell rows: prefer the dedicated ``bench_sharding``
+    artifact, fall back to the merged scenarios.json rows (a ``shards``
+    or ``shard`` column marks the kind either way)."""
+    p = Path("results/storage/sharding.json")
+    if p.exists():
+        return json.loads(p.read_text())
+    return [r for r in _scenario_rows() if "shards" in r or "shard" in r]
+
+
+def sharding_table() -> str:
+    """Sharded-cluster table from ``bench_sharding`` (rows carrying a
+    ``shards`` column): throughput scaling across shard counts, static vs
+    rebalanced routing under hot-key skew (splits = online shard splits
+    the rebalancer performed, charged in virtual time), and per-shard
+    availability under the kill-one-shard fault cell.  The per-shard
+    sub-rows render indented under their cell's aggregate row."""
+    rows = _sharding_rows()
+    if not rows:
+        return ""
+    aggs = [r for r in rows if "shards" in r and "shard" not in r]
+    subs = {}
+    for r in rows:
+        if "shard" in r:
+            subs.setdefault(r["cell"], []).append(r)
+    out = ["| cell | shards | routing | thpt/s | p99 ms | avail "
+           "| splits | shard ops |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(aggs, key=lambda r: (r.get("workload", ""),
+                                         r["shards"], r.get("cell", ""))):
+        routing = r.get("routing", "?")
+        if r.get("rebalance"):
+            routing += "+rb"
+        ops = r.get("shard_ops") or {}
+        dist = "/".join(str(ops[k]) for k in sorted(ops, key=int))
+        av = (f"{r['availability']:.4f}"
+              if "availability" in r else "—")
+        out.append(
+            f"| {r['cell']} | {r['shards']} | {routing} "
+            f"| {r['throughput']:.1f} "
+            f"| {r['latency_p']['p99']*1e3:.1f} "
+            f"| {av} | {len(r.get('splits') or [])} | {dist} |")
+        for s in sorted(subs.get(r["cell"], []),
+                        key=lambda s: s["shard"]):
+            out.append(
+                f"| &nbsp;&nbsp;└ shard {s['shard']} | | "
+                f"| | | {s['availability']:.4f} | "
+                f"| {s['kv_ops']} |")
+    return "\n".join(out) if len(out) > 2 else ""
 
 
 def _serving_rows():

@@ -76,15 +76,29 @@ NUMERIC_COLUMNS = ("n_arrived", "n_measured", "duration", "offered_rate",
                    "throughput", "mean_latency", "mean_queue",
                    "mean_service", "max_queue_depth", "ssd_zones")
 
+# per-shard sub-rows (ShardedDB.shard_stats + run_cell metadata): one per
+# shard store of a sharded cell, sharing the aggregate row's cell name
+SHARD_COLUMNS = ("shard", "kv_ops", "kv_completed", "availability",
+                 "ssd_read_bytes", "ssd_write_bytes", "hdd_read_bytes",
+                 "hdd_write_bytes", "compaction_debt", "cell", "scheme",
+                 "ssd_zones", "shards", "routing")
+SHARD_NUMERIC = ("kv_ops", "kv_completed", "ssd_read_bytes",
+                 "ssd_write_bytes", "hdd_read_bytes", "hdd_write_bytes",
+                 "compaction_debt", "shards", "ssd_zones")
+
 
 def row_kind(row: Dict) -> str:
-    """Discriminate the four row kinds sharing scenarios.json.
+    """Discriminate the five row kinds sharing scenarios.json.
 
     Serving rows are checked first: a multi-tenant serving run carries
     per-tenant columns too, and must not be mistaken for a storage
-    tenant row (whose required columns it does not have)."""
+    tenant row (whose required columns it does not have).  A ``shard``
+    column marks a per-shard sub-row (the sharded cell's aggregate row
+    carries ``shards`` but never ``shard``)."""
     if "tiering" in row:
         return "serving"
+    if "shard" in row:
+        return "shard"
     if "tenant" in row:
         return "tenant"
     if "fault" in row:
@@ -170,6 +184,11 @@ def validate_rows(rows, path: str = "<rows>",
             raise ValueError("\n".join(errors))
         return errors
     seen: Dict[tuple, int] = {}
+    # sharded-cell conservation: the aggregate row's per-shard op counts
+    # must sum to its kv_calls total, and the per-shard sub-rows must
+    # agree with the aggregate's breakdown
+    agg_shard_ops: Dict[str, Dict] = {}
+    sub_shard_ops: Dict[str, Dict] = {}
     for i, row in enumerate(rows):
         where = f"{path}[{i}]"
         if not isinstance(row, dict):
@@ -177,16 +196,41 @@ def validate_rows(rows, path: str = "<rows>",
             continue
         kind = row_kind(row)
         where = f"{where}({kind}:{row.get('cell', '?')})"
+        # duplicate-key detection: shard sub-rows share their aggregate
+        # row's cell name and a sharded cell may share a name with its
+        # single-DB twin in hand-built artifacts — the key must carry the
+        # shard axes or those legitimate pairs collide
+        key = (row.get("cell"),
+               row.get("tenant") or row.get("serving_tenant"),
+               row.get("shards"), row.get("shard"))
+        if key in seen:
+            errors.append(
+                f"{where}: duplicate cell key {key} (first at row "
+                f"{seen[key]}) — a merge overwrote or double-appended")
+        else:
+            seen[key] = i
         if kind == "serving":
             _check_serving(errors, where, row)
-            key = (row.get("cell"),
-                   row.get("tenant") or row.get("serving_tenant"))
-            if key in seen:
-                errors.append(
-                    f"{where}: duplicate cell key {key} (first at row "
-                    f"{seen[key]}) — a merge overwrote or double-appended")
-            else:
-                seen[key] = i
+            continue
+        if kind == "shard":
+            missing = [c for c in SHARD_COLUMNS if c not in row]
+            if missing:
+                errors.append(f"{where}: missing columns {missing}")
+                continue
+            for col in SHARD_NUMERIC:
+                v = row[col]
+                if not isinstance(v, (int, float)) \
+                        or not math.isfinite(v) or v < 0:
+                    errors.append(f"{where}: {col}={v!r} not a "
+                                  f"non-negative finite number")
+            av = row["availability"]
+            if not isinstance(av, (int, float)) or not 0 <= av <= 1:
+                errors.append(f"{where}: availability={av!r} not in [0,1]")
+            if row["scheme"] not in SCHEMES:
+                errors.append(f"{where}: unknown scheme {row['scheme']!r}")
+            if isinstance(row.get("kv_ops"), (int, float)):
+                sub_shard_ops.setdefault(row["cell"], {})[
+                    str(row["shard"])] = row["kv_ops"]
             continue
         required = BASE_COLUMNS + (
             TENANT_COLUMNS if kind == "tenant"
@@ -198,13 +242,19 @@ def validate_rows(rows, path: str = "<rows>",
         if kind == "tenant" and "fault" in row and "availability" not in row:
             errors.append(f"{where}: fault-injected tenant row must carry "
                           f"availability")
-        key = (row["cell"], row.get("tenant"))
-        if key in seen:
-            errors.append(
-                f"{where}: duplicate cell key {key} (first at row "
-                f"{seen[key]}) — a merge overwrote or double-appended")
-        else:
-            seen[key] = i
+        if "shards" in row:
+            so, kc = row.get("shard_ops"), row.get("kv_calls")
+            if not isinstance(so, dict) \
+                    or not isinstance(kc, (int, float)):
+                errors.append(f"{where}: sharded aggregate row must carry "
+                              f"shard_ops (object) and kv_calls (number)")
+            else:
+                if sum(so.values()) != kc:
+                    errors.append(
+                        f"{where}: per-shard op counts do not sum to the "
+                        f"cell total: sum(shard_ops)={sum(so.values())} "
+                        f"!= kv_calls={kc}")
+                agg_shard_ops[row["cell"]] = so
         if row["scheme"] not in SCHEMES:
             errors.append(f"{where}: unknown scheme {row['scheme']!r}")
         for col in NUMERIC_COLUMNS:
@@ -267,6 +317,13 @@ def validate_rows(rows, path: str = "<rows>",
             if "crash" not in row:
                 errors.append(f"{where}: recovery_slo_s without crash "
                               f"accounting")
+    for cell, subs in sub_shard_ops.items():
+        agg = agg_shard_ops.get(cell)
+        if agg is not None and {k: v for k, v in agg.items()} != subs:
+            errors.append(
+                f"{path}: cell {cell!r}: per-shard sub-row kv_ops "
+                f"{subs} disagree with the aggregate row's shard_ops "
+                f"{agg}")
     if strict and errors:
         raise ValueError(f"{len(errors)} schema violations:\n"
                          + "\n".join(errors))
@@ -336,7 +393,8 @@ def validate_file(path: Path) -> List[str]:
 
 
 DEFAULT_TARGETS = ("scenarios.json", "multitenant.json", "faults.json",
-                   "control.json", "filters.json", "serving.json")
+                   "control.json", "filters.json", "serving.json",
+                   "sharding.json")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:

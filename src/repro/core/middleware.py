@@ -576,29 +576,32 @@ class HybridZonedBackend:
     # ==================================================================
     # telemetry (repro.obs) — pull gauges only: zero hot-path overhead
     # ==================================================================
-    def install_metrics(self, reg) -> None:
+    def install_metrics(self, reg, prefix: str = "") -> None:
         """Register the middleware's signals on a ``MetricsRegistry``.
 
         Every signal maps to a paper hint family (§3.1): WAL pressure and
         zone counts are the flush-side backpressure (§3.2 zone
         organization), migration traffic is the §3.4 migrator at work,
-        cache hit rate is the §3.5 hinted cache paying off.
+        cache hit rate is the §3.5 hinted cache paying off.  ``prefix``
+        namespaces the series per shard (``s{i}.mw.*``) when the sharded
+        cluster facade installs several backends on one registry.
         """
-        reg.gauge("mw.wal_pressure", lambda: float(self.wal_pressure()))
-        reg.gauge("mw.wal_zones", lambda: float(self.wal_zones_in_use()))
-        reg.gauge("mw.wal_stalls", lambda: self.stats["wal_stalls"])
-        reg.gauge("mw.hdd_read_rate", self.hdd_read_rate)
+        p = prefix
+        reg.gauge(f"{p}mw.wal_pressure", lambda: float(self.wal_pressure()))
+        reg.gauge(f"{p}mw.wal_zones", lambda: float(self.wal_zones_in_use()))
+        reg.gauge(f"{p}mw.wal_stalls", lambda: self.stats["wal_stalls"])
+        reg.gauge(f"{p}mw.hdd_read_rate", self.hdd_read_rate)
         if self.cache is not None:
-            reg.gauge("mw.cache_hits", lambda: float(self.cache.hits))
-            reg.gauge("mw.cache_zones",
+            reg.gauge(f"{p}mw.cache_hits", lambda: float(self.cache.hits))
+            reg.gauge(f"{p}mw.cache_zones",
                       lambda: float(len(self.cache.zones)))
         if self.migrator is not None:
-            reg.gauge("mw.migrated_bytes",
+            reg.gauge(f"{p}mw.migrated_bytes",
                       lambda: float(self.migrator.bytes_moved))
             # migration traffic as a windowed rate (bytes/s between samples)
             reg.collector(lambda: {
-                "mw.migration_rate": float(self.migrator.bytes_moved)},
-                rate=True)
+                f"{p}mw.migration_rate": float(self.migrator.bytes_moved)},
+                rate=True, name=f"{p}mw.migration_rate")
 
 
 # ======================================================================
@@ -746,6 +749,12 @@ class AdmissionController:
         # LSMTree.compaction_debt; consulted only when cfg.debt_threshold
         # is set — the third pressure signal
         self.debt_gauge: Optional[Callable[[], float]] = None
+        # shard-scoped pressure signals (repro.cluster): one () -> bool
+        # callable per shard, typically that shard backend's wal_pressure.
+        # Any shard under pressure puts the cluster controller under
+        # pressure — a hot shard sheds/delays for the whole cluster, since
+        # routed ops cannot know in advance which shard they will hit.
+        self.shard_pressure: List[Callable[[], bool]] = []
         # live token-bucket rate overrides, driven by the SLO feedback
         # controller (repro.obs.control.ControlPlane) under policy
         # "feedback"; consulted before cfg.bucket_rates
@@ -765,12 +774,19 @@ class AdmissionController:
     def under_pressure(self) -> bool:
         if self.backend is not None and self.backend.wal_pressure():
             return True
+        if any(p() for p in self.shard_pressure):
+            return True
         g = self.queue_gauge
         if g is not None and g() > self.cfg.queue_threshold:
             return True
         d = self.debt_gauge
         return (d is not None and self.cfg.debt_threshold is not None
                 and d() > self.cfg.debt_threshold)
+
+    def shard_under_pressure(self) -> List[bool]:
+        """Per-shard pressure snapshot (empty for single-store
+        controllers); exposed for telemetry and the cluster rebalancer."""
+        return [bool(p()) for p in self.shard_pressure]
 
     # ------------------------------------------------------------------
     def decide(self, tenant: str) -> str:
@@ -874,3 +890,9 @@ class AdmissionController:
 
         reg.collector(_collect, rate=True, name="adm.tenants")
         reg.gauge("adm.pressure", lambda: float(self.under_pressure()))
+        if self.shard_pressure:
+            # per-shard pressure gauges: which shard is pushing back
+            def _shards() -> Dict[str, float]:
+                return {f"adm.s{i}.pressure": float(p())
+                        for i, p in enumerate(self.shard_pressure)}
+            reg.collector(_shards, name="adm.shard_pressure")

@@ -95,7 +95,8 @@ class DB:
                  scenario: Optional[ScenarioConfig] = None,
                  store_values: bool = False,
                  admission: "AdmissionConfig | str" = "none",
-                 telemetry: "bool | float" = False):
+                 telemetry: "bool | float" = False,
+                 sim: Optional[Sim] = None):
         base = scheme.split("+")[0]
         if scheme not in SCHEMES:
             raise ValueError(f"unknown scheme {scheme!r}; one of {SCHEMES}")
@@ -104,7 +105,9 @@ class DB:
         if store_values:
             sc = replace(sc, lsm=replace(sc.lsm, store_values=True))
         self.scenario = sc
-        self.sim = Sim()
+        # ``sim`` lets several stores share one DES clock — the sharded
+        # cluster facade (repro.cluster) runs N shard DBs on one simulator
+        self.sim = sim if sim is not None else Sim()
         self.ssd = ZonedDevice(self.sim, "ssd", sc.ssd_timing,
                                sc.ssd_zones, sc.ssd_zone_cap)
         self.hdd = ZonedDevice(self.sim, "hdd", sc.hdd_timing,
@@ -164,6 +167,63 @@ class DB:
         reg.start()
         self.metrics = reg
         return reg
+
+    # ---- store interface (repro.workloads.* target this, not DB) ------
+    # The open-loop runners, OpStream and the scenario matrix talk to any
+    # object exposing: sim/now, kv (op generators: put/get/get_batch/
+    # delete/scan), submit, run_for, drain, flush_all, extras(),
+    # compaction_debt(), fresh_admission(), scheme/scenario.  DB and
+    # repro.cluster.ShardedDB both satisfy it.
+    @property
+    def kv(self):
+        """Op-generator surface (put/get/get_batch/delete/scan).  For a
+        single store this is the LSM tree itself; the sharded facade
+        returns its routing layer instead."""
+        return self.tree
+
+    def compaction_debt(self) -> float:
+        """Bytes of compaction backlog (admission's third pressure signal).
+        Reads through ``self.tree`` so it survives crash/reopen swaps."""
+        return float(self.tree.compaction_debt())
+
+    def extras(self) -> dict:
+        """Device/cache/migration counters attached to every result row."""
+        tree = self.tree
+        extras = {
+            "ssd_read_bytes": self.ssd.counters.read_bytes,
+            "hdd_read_bytes": self.hdd.counters.read_bytes,
+            "ssd_write_bytes": self.ssd.counters.write_bytes,
+            "hdd_write_bytes": self.hdd.counters.write_bytes,
+            "block_cache_hit_rate": tree.block_cache.hit_rate(),
+            # Bloom accounting: probes of candidate SSTs and survivors that
+            # turned out absent; fp-per-probe = bloom_fp / filter_probes
+            "filter_probes": tree.stats["filter_probes"],
+            "bloom_fp": tree.stats["bloom_fp"],
+        }
+        if self.backend.cache is not None:
+            extras["ssd_cache_hits"] = self.backend.cache.hits
+            extras["ssd_cache_admitted"] = self.backend.cache.admitted
+        if self.backend.migrator is not None:
+            extras["migrated_bytes"] = self.backend.migrator.bytes_moved
+        return extras
+
+    def fresh_admission(self, policy=None) -> AdmissionController:
+        """Install and return a fresh per-run admission controller.
+
+        Counters, the per-run protected-set widening and the queue gauge
+        must not leak between runs on the same store; ``policy`` (a name
+        or ``AdmissionConfig``) overrides the constructor's config for
+        this run only — the pristine ``base_cfg`` is preserved so a later
+        ``policy=None`` run still sees the constructor's policy."""
+        orig_base = self.admission.base_cfg
+        self.admission = AdmissionController(
+            self.sim, self.backend,
+            policy if policy is not None else orig_base)
+        self.admission.base_cfg = orig_base
+        self.admission.debt_gauge = lambda: float(self.compaction_debt())
+        if self.metrics is not None:
+            self.admission.install_metrics(self.metrics)
+        return self.admission
 
     # ---- synchronous helpers (tests / examples) -----------------------
     def _run(self, gen):

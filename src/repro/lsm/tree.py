@@ -190,24 +190,29 @@ class LSMTree:
     # telemetry (repro.obs) — pull gauges over state the tree already
     # maintains; the put/get/flush/compaction hot paths are untouched
     # ------------------------------------------------------------------
-    def install_metrics(self, reg) -> None:
+    def install_metrics(self, reg, prefix: str = "") -> None:
         """Register the tree's signals on a ``MetricsRegistry``.  These are
         the §3.1 hint quantities as continuous series: compaction debt and
         L0 depth (compaction hints), flush backlog (flush hints), write
         amplification and the delayed-write controller's rate.  Re-invoked
-        by ``DB.reopen()`` so the gauges rebind to the recovered tree."""
-        reg.gauge("lsm.debt", lambda: float(self.compaction_debt()))
-        reg.gauge("lsm.l0_files", lambda: float(len(self.levels[0])))
-        reg.gauge("lsm.flush_backlog",
+        by ``DB.reopen()`` so the gauges rebind to the recovered tree.
+        ``prefix`` namespaces the series (the sharded cluster facade
+        installs each shard's tree as ``s{i}.lsm.*``); gauge and collector
+        names are replace-on-reinstall, so a shard reopen rebinds its own
+        series without touching its neighbours'."""
+        p = prefix
+        reg.gauge(f"{p}lsm.debt", lambda: float(self.compaction_debt()))
+        reg.gauge(f"{p}lsm.l0_files", lambda: float(len(self.levels[0])))
+        reg.gauge(f"{p}lsm.flush_backlog",
                   lambda: float(len(self.immutables) + len(self._flushing)))
-        reg.gauge("lsm.write_amp", self.write_amplification)
-        reg.gauge("lsm.delay_rate", lambda: self._delay_rate)
-        reg.gauge("lsm.write_stalls", lambda: self.stats["write_stalls"])
-        reg.gauge("lsm.block_cache_hit_rate", self.block_cache.hit_rate)
+        reg.gauge(f"{p}lsm.write_amp", self.write_amplification)
+        reg.gauge(f"{p}lsm.delay_rate", lambda: self._delay_rate)
+        reg.gauge(f"{p}lsm.write_stalls", lambda: self.stats["write_stalls"])
+        reg.gauge(f"{p}lsm.block_cache_hit_rate", self.block_cache.hit_rate)
         reg.collector(lambda: {
-            "lsm.compaction_rate": self.stats["compactions"],
-            "lsm.flush_rate": self.stats["flushes"],
-        }, rate=True, name="lsm.rates")
+            f"{p}lsm.compaction_rate": self.stats["compactions"],
+            f"{p}lsm.flush_rate": self.stats["flushes"],
+        }, rate=True, name=f"{p}lsm.rates")
 
     # ==================================================================
     # write path

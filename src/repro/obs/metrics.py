@@ -117,6 +117,34 @@ class MetricsRegistry:
             name = f"_anon{self._anon}"
         self._collectors[name] = (fn, rate)
 
+    def aggregate_gauge(self, name: str, part_names: List[str],
+                        reduce: str = "sum") -> None:
+        """Register a gauge computed from other *registered gauges* at
+        sample time — the cluster-rollup primitive (repro.cluster): e.g.
+        ``cluster.lsm.debt = sum(s0.lsm.debt, s1.lsm.debt, ...)``.
+
+        Parts are looked up by name on every sample, so a shard reopen
+        that rebinds ``s{i}.lsm.*`` to a recovered tree is picked up
+        automatically; parts not (yet) registered are skipped.  ``reduce``
+        is ``"sum"``, ``"max"`` or ``"mean"``."""
+        if reduce not in ("sum", "max", "mean"):
+            raise ValueError(f"unknown reduce {reduce!r}; "
+                             f"one of ('sum', 'max', 'mean')")
+        parts = list(part_names)
+
+        def _agg() -> float:
+            vals = [float(self._gauges[p]())
+                    for p in parts if p in self._gauges]
+            if not vals:
+                return 0.0
+            if reduce == "sum":
+                return float(sum(vals))
+            if reduce == "max":
+                return float(max(vals))
+            return float(sum(vals) / len(vals))
+
+        self.gauge(name, _agg)
+
     def attach_dict(self, d: Dict[str, float], prefix: str = "",
                     rate: bool = False,
                     name: Optional[str] = None) -> None:

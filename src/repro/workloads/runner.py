@@ -499,9 +499,26 @@ def run_open_loop(db, spec: WorkloadSpec, arrival: ArrivalProcess,
         at = t0 + faults.crash_at
         if at > sim.now:
             yield at - sim.now   # bare-delay: no Event
+        down0 = sim.now
+        if faults.crash_shard is not None:
+            # per-shard power loss (sharded stores): the dispatcher, the
+            # queue and every server not caught mid-op on the crashed
+            # shard keep serving; ops routed to the down shard park at
+            # the router and complete after recovery — only the shard's
+            # own in-flight ops are lost
+            info = db.crash_shard(faults.crash_shard)
+            crash_info["lost_in_flight"] = int(info["lost_in_flight"])
+            killed = {id(p) for p in info["killed_processes"]}
+            rec = yield from db.reopen_shard_gen(faults.crash_shard)
+            crash_info.update(rec)
+            crash_info["downtime"] = sim.now - down0
+            crash_info["refused"] = 0
+            # replace exactly the servers that died with the shard
+            for _ in range(sum(1 for p in procs if id(p) in killed)):
+                procs.append(db.submit(server()))
+            return
         crash_info["lost_in_flight"] = \
             int((~np.isnan(arrive) & np.isnan(done)).sum())
-        down0 = sim.now
         db.crash()                 # kills the dispatcher and every server
         queue.clear()
         idle.clear()
@@ -689,22 +706,16 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
     names = [t.name for t in tenants]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate tenant names: {names}")
+    if faults is not None and faults.crash_shard is not None:
+        raise ValueError("per-shard crashes (FaultSpec.crash_shard) are a "
+                         "single-stream feature; use run_open_loop")
     # fresh controller per run: counters, per-run protected-set widening
-    # and the queue gauge must not leak into later runs on the same DB
-    # (policy None keeps the DB's configured policy via its pristine cfg)
-    orig_base = db.admission.base_cfg
-    db.admission = AdmissionController(
-        sim, db.backend, policy if policy is not None else orig_base)
-    # an explicit per-run policy is an override, never the new DB default:
-    # the next policy=None run must still see the constructor's config
-    db.admission.base_cfg = orig_base
-    ctrl = db.admission
-    # the third pressure signal: compaction debt (read through db.tree so
-    # the gauge survives a mid-run crash/reopen tree swap); consulted only
-    # when the policy sets a debt_threshold
-    ctrl.debt_gauge = lambda: float(db.tree.compaction_debt())
-    if getattr(db, "metrics", None) is not None:
-        ctrl.install_metrics(db.metrics)
+    # and the queue gauge must not leak into later runs on the same store.
+    # The store wires its own pressure signals — backend WAL pressure and
+    # the compaction-debt gauge on a DB, per-shard pressure callbacks on a
+    # ShardedDB — and re-installs metrics; policy None keeps the store's
+    # configured policy via its pristine base_cfg.
+    ctrl = db.fresh_admission(policy)
     prot = frozenset(t.name for t in tenants if t.protected)
     if prot:
         # rebind (never mutate) the config: callers may share one
@@ -971,6 +982,12 @@ class ScenarioCell:
     # Bloom bits-per-key override for this cell's store (None = the
     # scenario default) — the filter-sweep axis
     filter_bits: Optional[int] = None
+    # sharding axis: shards > 1 runs the cell on a ShardedDB
+    # (repro.cluster) with the given routing policy; rebalance arms the
+    # telemetry-driven online splitter (range routing only)
+    shards: int = 1
+    routing: str = "hash"
+    rebalance: bool = False
 
     @property
     def name(self) -> str:
@@ -978,6 +995,10 @@ class ScenarioCell:
                 f"{self.arrival.name}/z{self.ssd_zones}")
         if self.filter_bits is not None:
             base += f"/fb{self.filter_bits}"
+        if self.shards > 1:
+            base += f"/sh{self.shards}-{self.routing}"
+            if self.rebalance:
+                base += "-rb"
         if self.fault is not None:
             base += f"/f:{self.fault.name}"
         return base
@@ -1073,6 +1094,14 @@ class ScenarioMatrix:
     # batched read path: >1 services consecutively queued point reads via
     # ``LSMTree.get_batch`` (see ``run_open_loop``)
     read_batch: int = 1
+    # sharding sweep (single-stream cells only): each entry > 1 runs the
+    # cell on a ``repro.cluster.ShardedDB`` with that many shard stores;
+    # ``routing`` picks the router ("hash" | "range") and ``rebalance``
+    # sweeps the online splitter on/off (ignored at shards == 1, where
+    # the sharded facade is event-identical to a bare DB)
+    shards: Sequence[int] = (1,)
+    routing: str = "hash"
+    rebalance: Sequence[bool] = (False,)
     # telemetry (repro.obs): True (or a sample period in virtual seconds)
     # attaches a MetricsRegistry to every cell's store — pull-only, so
     # rows stay byte-identical (asserted by CI grid-smoke); with
@@ -1121,31 +1150,45 @@ class ScenarioMatrix:
                     for pol in self.policies
                     for z in self.ssd_zone_budgets
                     for f in self.faults] + self._serving_cells()
-        return [ScenarioCell(s, w, a, z, f, fb)
+        return [ScenarioCell(s, w, a, z, f, fb, nsh, self.routing, rb)
                 for s in self.schemes
                 for w in map(self._workload_spec, self.workloads)
                 for a in self._arrivals_of(w)
                 for z in self.ssd_zone_budgets
                 for f in self.faults
-                for fb in self.filter_bits] + self._serving_cells()
+                for fb in self.filter_bits
+                for nsh in self.shards
+                for rb in (self.rebalance if nsh > 1 else (False,))
+                ] + self._serving_cells()
 
     def _fresh_db(self, scheme: str, ssd_zones: int,
-                  filter_bits: Optional[int] = None):
+                  filter_bits: Optional[int] = None, shards: int = 1,
+                  routing: str = "hash", rebalance: bool = False):
         if self.db_factory is not None:
-            # factories only need to understand filter_bits when the
-            # matrix actually sweeps it (GridDBFactory does)
+            # factories only need to understand the sweep kwargs the
+            # matrix actually exercises (GridDBFactory takes them all) —
+            # defaults are omitted so plain (scheme, zones) factories
+            # keep working
+            kw = {}
             if filter_bits is not None:
-                return self.db_factory(scheme, ssd_zones,
-                                       filter_bits=filter_bits)
-            return self.db_factory(scheme, ssd_zones)
+                kw["filter_bits"] = filter_bits
+            if shards > 1:
+                kw.update(shards=shards, routing=routing,
+                          rebalance=rebalance)
+            return self.db_factory(scheme, ssd_zones, **kw)
         from dataclasses import replace as _replace
         from ..lsm import DB, ScenarioConfig
         sc = ScenarioConfig(ssd_zones=ssd_zones)
         if filter_bits is not None:
             sc = _replace(sc, lsm=_replace(
                 sc.lsm, filter_bits_per_key=int(filter_bits)))
-        db = DB(scheme, sc)
         n_keys = sc.paper_keys // self.key_div
+        if shards > 1:
+            from ..cluster import ShardedDB
+            db = ShardedDB(scheme, sc, shards=shards, routing=routing,
+                           key_space=n_keys, rebalance=rebalance)
+        else:
+            db = DB(scheme, sc)
         run_load(db, n_keys=n_keys)
         db.flush_all()
         db.n_keys = n_keys
@@ -1165,10 +1208,17 @@ class ScenarioMatrix:
         from .serving import ServingCell, run_matrix_cell
         if isinstance(cell, ServingCell):
             return run_matrix_cell(self, cell)
+        n_shards = getattr(cell, "shards", 1)
         db = self._fresh_db(cell.scheme, cell.ssd_zones,
-                            getattr(cell, "filter_bits", None))
+                            getattr(cell, "filter_bits", None),
+                            shards=n_shards,
+                            routing=getattr(cell, "routing", "hash"),
+                            rebalance=getattr(cell, "rebalance", False))
         n_keys = getattr(db, "n_keys",
                          db.scenario.paper_keys // self.key_div)
+        # sharded cells: baseline the router counters after the load phase
+        # so per-shard rows report the measured run only
+        kv_snap = db.kv.snapshot() if n_shards > 1 else None
         reg = None
         if self.telemetry or self.timeline_dir is not None:
             period = (float(self.telemetry)
@@ -1204,7 +1254,27 @@ class ScenarioMatrix:
             fb = getattr(cell, "filter_bits", None)
             if fb is not None:
                 row["filter_bits"] = fb
+            if n_shards > 1:
+                calls0, routed0, _ = kv_snap
+                calls1, routed1, _ = db.kv.snapshot()
+                row["shards"] = n_shards
+                row["routing"] = cell.routing
+                row["rebalance"] = cell.rebalance
+                row["kv_calls"] = calls1 - calls0
+                row["shard_ops"] = {
+                    str(i): routed1[i] - routed0[i]
+                    for i in range(n_shards)}
+                row["splits"] = [dict(s) for s in db.splits]
             rows.append(row)
+        if n_shards > 1:
+            # per-shard sub-rows share the cell name (aggregate row is
+            # the one WITHOUT a "shard" column)
+            for srow in db.shard_stats(kv_snap):
+                srow.update(cell=cell.name, scheme=cell.scheme,
+                            ssd_zones=cell.ssd_zones, shards=n_shards,
+                            routing=cell.routing,
+                            rebalance=cell.rebalance)
+                rows.append(srow)
         return per_cell, rows
 
     def run(self, out: Optional[Union[str, Path]] = None,

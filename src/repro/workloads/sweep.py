@@ -63,17 +63,25 @@ class GridDBFactory:
 
     key_div: int = 1
     load_div: int = 4
+    rebalance_period: float = 30.0
 
     def __call__(self, scheme: str, ssd_zones: int,
-                 filter_bits: Optional[int] = None):
+                 filter_bits: Optional[int] = None, shards: int = 1,
+                 routing: str = "hash", rebalance: bool = False):
         from dataclasses import replace
         from ..lsm import DB, ScenarioConfig
         sc = ScenarioConfig(ssd_zones=ssd_zones)
         if filter_bits is not None:     # the matrix's filter-bits axis
             sc = replace(sc, lsm=replace(
                 sc.lsm, filter_bits_per_key=int(filter_bits)))
-        db = DB(scheme, sc)
         n = sc.paper_keys // (self.load_div * self.key_div)
+        if shards > 1:                  # the matrix's sharding axis
+            from ..cluster import ShardedDB
+            db = ShardedDB(scheme, sc, shards=shards, routing=routing,
+                           key_space=n, rebalance=rebalance,
+                           rebalance_period=self.rebalance_period)
+        else:
+            db = DB(scheme, sc)
         run_load(db, n_keys=n)
         db.flush_all()
         db.n_keys = n
@@ -192,6 +200,8 @@ def run_sweep(matrix: ScenarioMatrix,
         checkpoint()
         if verbose:
             for r in rows:
+                if "shard" in r:        # per-shard sub-rows: no latency
+                    continue
                 # serving rows carry decode_p where storage rows carry
                 # latency_p — the note line is kind-agnostic
                 lat = r.get("latency_p") or r.get("decode_p") or {}
@@ -303,7 +313,9 @@ def build_grid(schemes: Sequence[str], workloads: Sequence[str],
                arrival_kinds: Sequence[str], budgets: Sequence[int],
                *, duration: float, warmup: float, key_div: int,
                seed: int = 1, verbose: bool = False,
-               timelines: Optional[str] = None) -> ScenarioMatrix:
+               timelines: Optional[str] = None,
+               shards: Sequence[int] = (1,), routing: str = "hash",
+               rebalance: Sequence[bool] = (False,)) -> ScenarioMatrix:
     """The full-grid ScenarioMatrix the CLI (and CI smoke/nightly) runs.
 
     ``timelines`` enables the per-cell telemetry bus (``repro.obs``) and
@@ -319,7 +331,8 @@ def build_grid(schemes: Sequence[str], workloads: Sequence[str],
         arrivals=arrivals, ssd_zone_budgets=list(budgets),
         duration=duration, warmup=warmup, key_div=key_div, seed=seed,
         db_factory=GridDBFactory(key_div=key_div),
-        telemetry=timelines is not None, timeline_dir=timelines)
+        telemetry=timelines is not None, timeline_dir=timelines,
+        shards=list(shards), routing=routing, rebalance=list(rebalance))
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -349,6 +362,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--budget-s", type=float, default=None,
                     help="wall-clock budget; stop dispatching new cells "
                          "after this many seconds")
+    ap.add_argument("--shards", default="1",
+                    help="comma-separated shard counts; entries > 1 run "
+                         "the cell on a ShardedDB (repro.cluster)")
+    ap.add_argument("--routing", default="hash",
+                    choices=("hash", "range"),
+                    help="router for sharded cells")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="also sweep the online rebalancer on sharded "
+                         "cells (adds the -rb variant; range routing)")
     ap.add_argument("--out", default="results/storage/scenarios.json")
     ap.add_argument("--fresh", action="store_true",
                     help="re-run cells even if already present in --out")
@@ -366,7 +388,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         [int(b) for b in args.budgets.split(",") if b],
         duration=args.duration, warmup=args.warmup,
         key_div=args.key_div, seed=args.seed,
-        timelines=args.timelines)
+        timelines=args.timelines,
+        shards=[int(s) for s in args.shards.split(",") if s],
+        routing=args.routing,
+        rebalance=[False, True] if args.rebalance else [False])
 
     validate = None
     try:  # optional: schema linting before every write (CI installs it)

@@ -30,9 +30,17 @@ class WorkloadSpec:
     insert: float = 0.0
     scan: float = 0.0
     rmw: float = 0.0
-    dist: str = "zipf"        # "zipf" | "latest"
+    dist: str = "zipf"        # "zipf" | "latest" | "hotspot"
     alpha: float = 0.9
     scan_max: int = 100
+    # "hotspot" distribution: zipf-popular ranks map to a *contiguous*
+    # key range (no scramble) whose base drifts by ``hotspot_step`` keys
+    # every ``hotspot_period`` ops — a moving hot spot in keyspace, the
+    # adversarial load for range sharding (the hot range concentrates on
+    # one shard, then walks off it).  ``hotspot_step=0`` means
+    # n_keys // 8, resolved when the stream is built.
+    hotspot_period: int = 2000
+    hotspot_step: int = 0
 
     def mix(self):
         return np.array([self.read, self.update, self.insert,
@@ -131,20 +139,28 @@ class OpStream:
         self.frontier = n_keys            # total inserted keys (D/E inserts)
         self.db = db
         self.counts = {name: 0 for name in OP_NAMES.values()}
+        self._hot_step = spec.hotspot_step or max(1, n_keys // 8)
 
     @property
     def tree(self):
         # resolved per-op, not cached: DB.reopen() swaps in a fresh tree
-        # and queued ops must not write into the discarded one
-        return self.db.tree
+        # (or the sharded facade re-routes) and queued ops must not write
+        # into discarded state
+        return self.db.kv
 
-    def resolve(self, code: int, rank: int) -> int:
+    def resolve(self, code: int, rank: int, i: int = 0) -> int:
         if self.spec.dist == "latest" and code == READ:
             # most-recent first: offset `rank` back from the insert frontier
             off = self.frontier - 1 - rank
             if off < 0:
                 off = 0
             return int(self.load_order[off]) if off < self.n_keys else off
+        if self.spec.dist == "hotspot":
+            # contiguous drifting hot range: popular ranks land next to
+            # each other in keyspace (deliberately unscrambled) and the
+            # base walks every hotspot_period ops
+            phase = i // max(1, self.spec.hotspot_period)
+            return int((rank + phase * self._hot_step) % self.n_keys)
         return int(self.scramble[rank % self.n_keys])
 
     def is_point_read(self, i: int) -> bool:
@@ -157,7 +173,8 @@ class OpStream:
         ``LSMTree.get_batch`` call (vectorized Bloom probing).  Result-
         identical to executing them one by one; only service timing and
         python overhead differ."""
-        keys = [self.resolve(READ, int(self.ops.args[i])) for i in idxs]
+        keys = [self.resolve(READ, int(self.ops.args[i]), int(i))
+                for i in idxs]
         res = yield from self.tree.get_batch(keys)
         self.counts["read"] += len(idxs)
         return res
@@ -167,43 +184,28 @@ class OpStream:
         code = int(self.ops.codes[i])
         rank = int(self.ops.args[i])
         if code == READ:
-            yield from self.tree.get(self.resolve(code, rank))
+            yield from self.tree.get(self.resolve(code, rank, i))
         elif code == UPDATE:
-            yield from self.tree.put(self.resolve(code, rank))
+            yield from self.tree.put(self.resolve(code, rank, i))
         elif code == INSERT:
             key = self.frontier
             self.frontier += 1
             yield from self.tree.put(key)
         elif code == SCAN:
-            yield from self.tree.scan(self.resolve(code, rank),
+            yield from self.tree.scan(self.resolve(code, rank, i),
                                       int(self.ops.scan_lens[i]))
         elif code == RMW:
-            key = self.resolve(code, rank)
+            key = self.resolve(code, rank, i)
             yield from self.tree.get(key)
             yield from self.tree.put(key)
         self.counts[OP_NAMES[code]] += 1
 
 
 def collect_extras(db) -> Dict[str, float]:
-    """Device/cache/migration counters attached to every result row."""
-    tree = db.tree
-    extras = {
-        "ssd_read_bytes": db.ssd.counters.read_bytes,
-        "hdd_read_bytes": db.hdd.counters.read_bytes,
-        "ssd_write_bytes": db.ssd.counters.write_bytes,
-        "hdd_write_bytes": db.hdd.counters.write_bytes,
-        "block_cache_hit_rate": tree.block_cache.hit_rate(),
-        # Bloom accounting: probes of candidate SSTs and survivors that
-        # turned out absent; fp-per-probe = bloom_fp / filter_probes
-        "filter_probes": tree.stats["filter_probes"],
-        "bloom_fp": tree.stats["bloom_fp"],
-    }
-    if db.backend.cache is not None:
-        extras["ssd_cache_hits"] = db.backend.cache.hits
-        extras["ssd_cache_admitted"] = db.backend.cache.admitted
-    if db.backend.migrator is not None:
-        extras["migrated_bytes"] = db.backend.migrator.bytes_moved
-    return extras
+    """Device/cache/migration counters attached to every result row —
+    delegated to the store (``DB.extras`` / ``ShardedDB.extras``, which
+    aggregates across shards)."""
+    return db.extras()
 
 
 def run_load(db, n_keys: int, num_clients: int = 16, seed: int = 42,
@@ -212,7 +214,7 @@ def run_load(db, n_keys: int, num_clients: int = 16, seed: int = 42,
     rng = np.random.default_rng(seed)
     load_order = rng.permutation(n_keys).astype(np.int64)
     db.load_order = load_order          # recency mapping for workload D
-    tree, sim = db.tree, db.sim
+    tree, sim = db.kv, db.sim
     t0 = sim.now
     lat: List[float] = []
     cursor = {"i": 0}

@@ -35,11 +35,15 @@ SSD, HDD, BOTH = "ssd", "hdd", "both"
 
 @dataclass(frozen=True)
 class StallWindow:
-    """Device freeze: I/O submitted in [at, at + duration) waits it out."""
+    """Device freeze: I/O submitted in [at, at + duration) waits it out.
+
+    ``shard`` targets one shard store of a ``repro.cluster.ShardedDB``
+    (None = every store; ignored on a bare ``DB``)."""
 
     at: float
     duration: float
     device: str = SSD            # "ssd" | "hdd" | "both"
+    shard: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -50,6 +54,7 @@ class SlowWindow:
     duration: float
     factor: float = 4.0
     device: str = HDD
+    shard: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -60,6 +65,7 @@ class ZoneReset:
     at: float
     device: str = SSD
     zid: Optional[int] = None
+    shard: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -74,6 +80,9 @@ class FaultSpec:
 
     name: str = "faults"
     crash_at: Optional[float] = None
+    # crash only this shard of a ShardedDB at crash_at (None = whole
+    # store); the other shards keep serving while it replays its WAL
+    crash_shard: Optional[int] = None
     stalls: Tuple[StallWindow, ...] = ()
     slows: Tuple[SlowWindow, ...] = ()
     zone_resets: Tuple[ZoneReset, ...] = ()
@@ -84,15 +93,23 @@ class FaultSpec:
         """Human-readable schedule, used in result rows and reports."""
         parts = []
         if self.crash_at is not None:
-            parts.append(f"crash@{self.crash_at:g}")
+            who = (f"(s{self.crash_shard})"
+                   if self.crash_shard is not None else "")
+            parts.append(f"crash{who}@{self.crash_at:g}")
         for s in self.stalls:
-            parts.append(f"stall[{s.device}]@{s.at:g}+{s.duration:g}")
+            parts.append(f"stall[{_dev_label(s)}]@{s.at:g}+{s.duration:g}")
         for s in self.slows:
-            parts.append(f"slow[{s.device}]x{s.factor:g}"
+            parts.append(f"slow[{_dev_label(s)}]x{s.factor:g}"
                          f"@{s.at:g}+{s.duration:g}")
         for z in self.zone_resets:
-            parts.append(f"zreset[{z.device}]@{z.at:g}")
+            parts.append(f"zreset[{_dev_label(z)}]@{z.at:g}")
         return ",".join(parts) if parts else "none"
+
+
+def _dev_label(w) -> str:
+    if w.shard is None:
+        return w.device
+    return f"s{w.shard}.{w.device}"
 
 
 class FaultInjector:
@@ -130,10 +147,24 @@ class FaultInjector:
             if w.at > after:
                 sim.process(self._zone_reset(w))
 
-    def _devices(self, which: str):
-        if which == BOTH:
-            return [self.db.ssd, self.db.hdd]
-        return [self.db.backend.device_of(which)]
+    def _dbs(self, shard: Optional[int]):
+        """Target stores of a window: the shard stores of a ShardedDB
+        (one of them when ``shard`` is set) or the bare DB itself."""
+        subs = getattr(self.db, "shards", None)
+        if subs is None or isinstance(subs, int):
+            return [self.db]
+        if shard is None:
+            return list(subs)
+        return [subs[shard]]
+
+    def _devices(self, which: str, shard: Optional[int] = None):
+        devs = []
+        for db in self._dbs(shard):
+            if which == BOTH:
+                devs.extend([db.ssd, db.hdd])
+            else:
+                devs.append(db.backend.device_of(which))
+        return devs
 
     def _wait(self, at: float):
         delay = self.t0 + at - self.db.sim.now
@@ -143,23 +174,24 @@ class FaultInjector:
     # ------------------------------------------------------------------
     def _stall(self, w: StallWindow):
         yield from self._wait(w.at)
-        for dev in self._devices(w.device):
+        for dev in self._devices(w.device, w.shard):
             dev.stall(w.duration)
         self.fired["stalls"] += 1
 
     def _slow(self, w: SlowWindow):
         yield from self._wait(w.at)
-        for dev in self._devices(w.device):
+        for dev in self._devices(w.device, w.shard):
             dev.degrade(w.duration, w.factor)
         self.fired["slows"] += 1
 
     def _zone_reset(self, w: ZoneReset):
         yield from self._wait(w.at)
-        dev = self.db.backend.device_of(w.device)
-        zone = self._pick(dev, w.zid)
-        if zone is not None:
-            self.db.backend.on_zone_fault(w.device, zone)
-            self.fired["zone_resets"] += 1
+        for db in self._dbs(w.shard):
+            dev = db.backend.device_of(w.device)
+            zone = self._pick(dev, w.zid)
+            if zone is not None:
+                db.backend.on_zone_fault(w.device, zone)
+                self.fired["zone_resets"] += 1
 
     @staticmethod
     def _pick(dev, zid: Optional[int]):

@@ -1,0 +1,341 @@
+"""Sharded-cluster correctness (``repro.cluster``).
+
+Covers the acceptance bar for the cluster layer:
+
+* a 1-shard ``ShardedDB`` under hash routing is event-for-event
+  identical to a bare ``DB`` — same answers AND same virtual clock —
+  for every placement scheme;
+* router units (splitmix64 spread, range reassign/coalesce/clipping);
+* the drifting-hotspot key chooser actually moves its hot set;
+* online-split edge cases: ops in flight during the split, an
+  empty-range move, and a source-shard crash mid-split (rolls back,
+  never half-routes);
+* per-shard crash isolation: the survivor keeps serving while the
+  crashed shard's ops park and drain after recovery;
+* the router conservation invariant ``sum(routed) == calls``.
+"""
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from repro.cluster import (INF, HashRouter, RangeRouter, ShardedDB,
+                           live_keys_in_range)
+from repro.lsm import DB, SCHEMES
+from repro.workloads.ycsb import READ, OpStream, WorkloadSpec
+
+
+# ---------------------------------------------------------------------------
+# routers
+
+
+def test_hash_router_spreads_and_is_stable():
+    r = HashRouter(4)
+    owners = [r.route(k) for k in range(4000)]
+    assert owners == [r.route(k) for k in range(4000)]
+    counts = np.bincount(owners, minlength=4)
+    assert counts.min() > 0.8 * counts.max()  # splitmix64 is well mixed
+    assert set(owners) == {0, 1, 2, 3}
+
+
+def test_range_router_initial_partition_covers_keyspace():
+    r = RangeRouter(4, 1000)
+    assert [r.route(k) for k in (0, 249, 250, 499, 500, 749, 750, 999)] \
+        == [0, 0, 1, 1, 2, 2, 3, 3]
+    # keys past the nominal keyspace still route (last segment to +inf)
+    assert r.route(10 ** 9) == 3
+
+
+def test_range_router_reassign_splits_and_coalesces():
+    r = RangeRouter(2, 100)    # [0,50)->0, [50,inf)->1
+    r.reassign(10, 20, 1)
+    assert [r.route(k) for k in (9, 10, 19, 20)] == [0, 1, 1, 0]
+    # covering_segments clips to the query and merges same-owner runs
+    segs = r.covering_segments(0, 50)
+    assert segs == [(0, 10, 0), (10, 20, 1), (20, 50, 0)]
+    # handing the range back re-coalesces to the original partition
+    r.reassign(10, 20, 0)
+    assert r.covering_segments(0, 100) == [(0, 50, 0), (50, 100, 1)]
+    assert len(r.segments_of(0)) == 1
+
+
+def test_range_router_reassign_to_inf():
+    r = RangeRouter(2, 100)
+    r.reassign(80, INF, 0)
+    assert r.route(80) == 0 and r.route(10 ** 12) == 0
+    assert r.shards_for_range(50, 80) == [1]
+
+
+# ---------------------------------------------------------------------------
+# 1-shard equivalence: ShardedDB(shards=1, hash) vs bare DB
+
+
+def _kv_sequence(seed=7, n_ops=260, key_space=300):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        key = int(rng.integers(key_space))
+        if r < 0.45:
+            ops.append(("put", key,
+                        b"v%d-%d" % (key, int(rng.integers(1 << 16)))))
+        elif r < 0.70:
+            ops.append(("get", key, None))
+        elif r < 0.85:
+            ops.append(("del", key, None))
+        else:
+            ops.append(("scan", key, int(rng.integers(1, 20))))
+    return ops
+
+
+def _drive(store, ops):
+    out = []
+    for op, key, arg in ops:
+        if op == "put":
+            store.put(key, arg)
+        elif op == "del":
+            store.delete(key)
+        elif op == "get":
+            out.append(("get", key, store.get(key)))
+        else:
+            out.append(("scan", key, store.scan(key, arg)))
+    store.drain()
+    out.append(("now", store.sim.now if isinstance(store, ShardedDB)
+                else store.sim.now, None))
+    return out
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_one_shard_is_event_identical_to_bare_db(scheme):
+    """The router adds zero yields on the unblocked path, so a 1-shard
+    cluster must replay the bare store exactly — answers and clock."""
+    ops = _kv_sequence()
+    bare = _drive(DB(scheme, tiny_scenario(), store_values=True), ops)
+    one = _drive(ShardedDB(scheme, tiny_scenario(), shards=1,
+                           routing="hash", store_values=True), ops)
+    assert one == bare
+
+
+def test_one_shard_range_routing_also_identical():
+    ops = _kv_sequence(seed=11)
+    bare = _drive(DB("HHZS", tiny_scenario(), store_values=True), ops)
+    one = _drive(ShardedDB("HHZS", tiny_scenario(), shards=1,
+                           routing="range", key_space=300,
+                           store_values=True), ops)
+    assert one == bare
+
+
+# ---------------------------------------------------------------------------
+# multi-shard answers + routing conservation
+
+
+def _model(ops):
+    m = {}
+    for op, key, arg in ops:
+        if op == "put":
+            m[key] = arg
+        elif op == "del":
+            m.pop(key, None)
+    return m
+
+
+@pytest.mark.parametrize("routing", ["hash", "range"])
+def test_multi_shard_answers_match_model(routing):
+    ops = _kv_sequence(seed=3, n_ops=300)
+    db = ShardedDB("HHZS", tiny_scenario(), shards=3, routing=routing,
+                   key_space=300, store_values=True)
+    m = {}
+    for op, key, arg in ops:
+        if op == "put":
+            db.put(key, arg)
+            m[key] = arg
+        elif op == "del":
+            db.delete(key)
+            m.pop(key, None)
+        elif op == "get":
+            assert db.get(key) == (key in m, m.get(key))
+        else:
+            found = db.scan(key, arg)
+            assert found == sum(1 for k in m if key <= k < key + arg)
+    db.drain()
+    calls, routed, completed = db.kv.snapshot()
+    assert sum(routed) == calls
+    assert completed == routed  # everything drained
+    if routing == "range":
+        assert all(n > 0 for n in routed)  # keyspace actually partitioned
+
+
+# ---------------------------------------------------------------------------
+# drifting hotspot (workloads satellite)
+
+
+def test_hotspot_hot_set_moves():
+    spec = WorkloadSpec("hot", read=1.0, alpha=0.99, dist="hotspot",
+                        hotspot_period=100, hotspot_step=250)
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    st = OpStream(db, spec, n_ops=400, n_keys=1000)
+    phases = []
+    for phase in range(4):
+        keys = {st.resolve(READ, rank, i=phase * 100 + j)
+                for j, rank in enumerate(range(64))}
+        phases.append(keys)
+    # each dwell phase is the same contiguous range, shifted by step
+    for p, keys in enumerate(phases):
+        assert keys == {(rank + p * 250) % 1000 for rank in range(64)}
+    assert phases[0].isdisjoint(phases[1])
+
+
+def test_hotspot_default_step_is_eighth_of_keyspace():
+    spec = WorkloadSpec("hot", read=1.0, dist="hotspot",
+                        hotspot_period=50)     # hotspot_step left at 0
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    st = OpStream(db, spec, n_ops=100, n_keys=800)
+    assert st._hot_step == 100
+    assert st.resolve(READ, 0, i=0) == 0
+    assert st.resolve(READ, 0, i=50) == 100
+
+
+def test_hotspot_keys_are_contiguous_not_scrambled():
+    spec = WorkloadSpec("hot", read=1.0, dist="hotspot",
+                        hotspot_period=10 ** 9)
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    st = OpStream(db, spec, n_ops=100, n_keys=1000)
+    assert [st.resolve(READ, r, i=0) for r in range(10)] == list(range(10))
+
+
+# ---------------------------------------------------------------------------
+# online splits
+
+
+def _loaded_cluster(shards=2, n=200):
+    db = ShardedDB("HHZS", tiny_scenario(), shards=shards, routing="range",
+                   key_space=n, store_values=True)
+    for k in range(n):
+        db.put(k, b"v%d" % k)
+    db.drain()
+    return db
+
+
+def test_split_moves_range_and_preserves_answers():
+    db = _loaded_cluster()
+    assert db.router.route(10) == 0
+    proc = db.split(0, 50, 1)
+    res = db.sim.run_until(proc)
+    assert res["completed"] and res["moved_keys"] == 50
+    assert db.router.route(10) == 1 and db.router.route(50) == 0
+    for k in range(0, 200, 7):
+        assert db.get(k) == (True, b"v%d" % k)
+    assert db.splits and db.splits[-1]["completed"]
+
+
+def test_split_with_ops_in_flight_drains_then_flips():
+    db = _loaded_cluster()
+    answers = []
+
+    def reader(k):
+        got = yield from db.kv.get(k)
+        answers.append((k, got))
+
+    # in-flight ops overlapping the moving range force the drain phase;
+    # ops arriving *during* the split park and are released at the flip
+    for k in (1, 2, 3):
+        db.submit(reader(k))
+    proc = db.split(0, 50, 1)
+    for k in (4, 5, 48, 49, 150):
+        db.submit(reader(k))
+    res = db.sim.run_until(proc)
+    db.drain()
+    assert res["completed"]
+    assert sorted(answers) == [(k, (True, b"v%d" % k))
+                               for k in (1, 2, 3, 4, 5, 48, 49, 150)]
+    calls, routed, completed = db.kv.snapshot()
+    assert sum(routed) == calls and completed == routed
+
+
+def test_split_of_empty_range_completes():
+    db = ShardedDB("HHZS", tiny_scenario(), shards=2, routing="range",
+                   key_space=200, store_values=True)
+    for k in range(100, 200):       # shard 1 only; shard 0 stays empty
+        db.put(k, b"x")
+    db.drain()
+    res = db.sim.run_until(db.split(0, 100, 1))
+    assert res["completed"] and res["moved_keys"] == 0
+    assert db.router.route(0) == 1
+    assert db.get(0) == (False, None)
+    assert db.get(150) == (True, b"x")
+
+
+def test_split_rejects_range_spanning_shards():
+    db = _loaded_cluster()
+    res = db.sim.run_until(db.split(50, 150, 1))
+    assert not res["completed"] and "spans" in res["reason"]
+
+
+def test_source_crash_mid_split_rolls_back_routing():
+    db = _loaded_cluster()
+    before = db.router.describe()
+    db.split(0, 50, 1)
+    db.run_for(1e-6)                # let the split start copying
+    db.crash_shard(0)
+    assert db.router.describe() == before      # never half-routed
+    assert db._split_state is None
+    assert db.splits and not db.splits[-1]["completed"]
+    # survivor keeps answering its own range while shard 0 is down
+    assert db.get(150) == (True, b"v150")
+    db.sim.run_until(db.sim.process(db.reopen_shard_gen(0)))
+    db.drain()
+    # WAL replay restored the source shard; answers intact
+    for k in range(0, 50, 7):
+        assert db.get(k) == (True, b"v%d" % k)
+    # and the range can be re-split successfully afterwards
+    res = db.sim.run_until(db.split(0, 50, 1))
+    assert res["completed"]
+    assert db.get(10) == (True, b"v10")
+
+
+# ---------------------------------------------------------------------------
+# per-shard crash isolation
+
+
+def test_crashed_shard_parks_ops_while_survivor_serves():
+    db = _loaded_cluster()
+    db.crash_shard(0)
+    served, parked = [], []
+
+    def reader(k, sink):
+        got = yield from db.kv.get(k)
+        sink.append((k, got))
+
+    db.submit(reader(150, served))   # survivor's range
+    db.submit(reader(10, parked))    # crashed shard's range: parks
+    db.run_for(5.0)
+    assert served == [(150, (True, b"v150"))]
+    assert parked == []              # still parked, not lost, not failed
+    db.sim.run_until(db.sim.process(db.reopen_shard_gen(0)))
+    db.drain()
+    assert parked == [(10, (True, b"v10"))]
+    calls, routed, completed = db.kv.snapshot()
+    assert sum(routed) == calls
+
+
+def test_crash_shard_reports_killed_inflight():
+    db = _loaded_cluster()
+
+    def reader(k):
+        yield from db.kv.get(k)
+
+    db.submit(reader(10))
+    db.run_for(1e-6)                # op enters the shard, still in flight
+    rep = db.crash_shard(0)
+    assert rep["shard"] == 0 and rep["lost_in_flight"] >= 1
+    # the kill force-cleared shard 0's inflight tokens: a fresh split of
+    # the survivor's range must not wait on ghosts
+    assert not db.kv.inflight[0]
+
+
+def test_crash_all_shards_then_reopen_roundtrip():
+    db = _loaded_cluster()
+    db.crash()
+    db.reopen()
+    db.drain()
+    for k in range(0, 200, 11):
+        assert db.get(k) == (True, b"v%d" % k)
