@@ -1,0 +1,166 @@
+"""Bench-trend tracker: append canary results to a committed trajectory.
+
+The CI ``bench-trend`` job feeds this module the CSVs produced by the
+``bench-canary`` job (``sim_speed.csv`` / ``read_path.csv``) plus the
+published control-plane rows, and it appends one entry to
+``results/bench_trajectory.json``::
+
+    {"kind": "bench_trajectory",
+     "entries": [{"git_sha": ..., "date": ...,
+                  "sim_speed_geomean": ..., "read_path_speedup": ...,
+                  "control_p99_ratio": ...}, ...]}
+
+* ``sim_speed_geomean`` — DES-kernel speedup vs the frozen seed kernel
+  (geomean over scales), parsed from the ``sim_speed_geomean,,,X.XXx``
+  marker row of ``benchmarks/sim_speed.py``.
+* ``read_path_speedup`` — batched vs per-key read path, parsed from the
+  ``read_path_speedup,,,X.XXx`` marker row of
+  ``benchmarks/read_path_bench.py``.
+* ``control_p99_ratio`` — control-plane quality: best-controller
+  protected-tenant p99 divided by the open-loop ``reject`` baseline's
+  on B3, from ``results/storage/control.json`` (lower is better; null
+  when the bench artifact is absent, e.g. on PR CI which does not run
+  the 900 s control bench).
+
+**Trend gate:** the append *fails* (exit 1) when the new sim-speed
+geomean regresses more than ``--regression`` (default 20%) below the
+best of the last ``--window`` (default 5) committed entries — a slow
+drift across several PRs trips it even when each individual PR passes
+the absolute ``--target`` floor of the canary itself.
+
+The artifact is linted with ``benchmarks.validate_results`` before every
+write; same-sha re-runs replace their old entry (idempotent).
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from benchmarks.validate_results import validate_trajectory
+
+_MARKER = re.compile(r"^(?P<key>[a-z_]+),,,(?P<val>[0-9.]+)x\s*$")
+
+
+def parse_marker_csv(path: Path, key: str) -> float:
+    """Extract the ``key,,,X.XXx`` summary row from a canary CSV."""
+    for line in path.read_text().splitlines():
+        m = _MARKER.match(line.strip())
+        if m and m.group("key") == key:
+            return float(m.group("val"))
+    raise ValueError(f"{path}: no '{key},,,<X.XX>x' marker row")
+
+
+def control_p99_ratio(path: Path, scheme: str = "B3") -> Optional[float]:
+    """Best-controller prot p99 / open-loop ``reject`` prot p99.
+
+    Reads the published multi-tenant rows of ``bench_control`` and takes
+    the best (lowest) protected-tenant p99 across the feedback-family
+    policies, normalised by the ``reject`` baseline on the same scheme.
+    Returns ``None`` when the artifact (or either row) is missing, so
+    PR CI — which never runs the 900 s control bench — records null.
+    """
+    if not path.exists():
+        return None
+    rows = json.loads(path.read_text())
+    p99: Dict[str, float] = {}
+    for r in rows:
+        if (r.get("scheme") == scheme and r.get("tenant") == "prot"
+                and r.get("latency_p")):
+            p99[r.get("policy")] = r["latency_p"]["p99"]
+    controllers = [v for k, v in p99.items()
+                   if k in ("feedback", "pi", "aimd+knobs", "pi+knobs")]
+    if not controllers or "reject" not in p99:
+        return None
+    return round(min(controllers) / p99["reject"], 4)
+
+
+def append_entry(traj_path: Path, entry: Dict, *, window: int = 5,
+                 regression: float = 0.2) -> int:
+    """Append ``entry``, enforce the trend gate, rewrite the artifact.
+
+    Returns a process exit code: 0 on pass, 1 when the new sim-speed
+    geomean is below ``(1 - regression) *`` the best geomean of the last
+    ``window`` previously committed entries.  The entry is written
+    either way — a failing run must still leave the data point in the
+    artifact so the regression is visible in the committed history.
+    """
+    doc = {"kind": "bench_trajectory", "entries": []}
+    if traj_path.exists():
+        doc = json.loads(traj_path.read_text())
+    entries: List[Dict] = [e for e in doc.get("entries", [])
+                           if e.get("git_sha") != entry["git_sha"]]
+    recent = entries[-window:]
+    best = max((e["sim_speed_geomean"] for e in recent), default=None)
+    entries.append(entry)
+    doc = {"kind": "bench_trajectory", "entries": entries}
+    validate_trajectory(doc, str(traj_path), strict=True)
+    traj_path.parent.mkdir(parents=True, exist_ok=True)
+    traj_path.write_text(json.dumps(doc, indent=1) + "\n")
+
+    ok = True
+    if best is not None:
+        floor = (1.0 - regression) * best
+        ok = entry["sim_speed_geomean"] >= floor
+        print(f"[bench_trend] sim_speed_geomean {entry['sim_speed_geomean']:.2f}x "
+              f"vs best-of-last-{len(recent)} {best:.2f}x "
+              f"(floor {floor:.2f}x): {'ok' if ok else 'REGRESSION'}")
+    else:
+        print(f"[bench_trend] sim_speed_geomean "
+              f"{entry['sim_speed_geomean']:.2f}x (first entry, no gate)")
+    print(f"[bench_trend] {len(entries)} entries in {traj_path}")
+    return 0 if ok else 1
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            text=True, stderr=subprocess.DEVNULL).strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="append canary results to the bench trajectory and "
+                    "gate on trend regressions")
+    ap.add_argument("--sim-csv", default="sim_speed.csv",
+                    help="CSV from benchmarks.sim_speed (tee'd in CI)")
+    ap.add_argument("--read-csv", default="read_path.csv",
+                    help="CSV from benchmarks.read_path_bench")
+    ap.add_argument("--control", default="results/storage/control.json",
+                    help="published bench_control rows (ratio is null "
+                         "when absent)")
+    ap.add_argument("--out", default="results/bench_trajectory.json")
+    ap.add_argument("--sha", default=None,
+                    help="commit sha to record (default: git rev-parse)")
+    ap.add_argument("--date", default=None,
+                    help="ISO date to record (default: today, UTC)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="trend window: compare vs best of last N entries")
+    ap.add_argument("--regression", type=float, default=0.2,
+                    help="allowed fractional drop vs the window best")
+    args = ap.parse_args(argv)
+
+    entry = {
+        "git_sha": args.sha or git_sha(),
+        "date": args.date or datetime.datetime.now(
+            datetime.timezone.utc).date().isoformat(),
+        "sim_speed_geomean": parse_marker_csv(Path(args.sim_csv),
+                                              "sim_speed_geomean"),
+        "read_path_speedup": parse_marker_csv(Path(args.read_csv),
+                                              "read_path_speedup"),
+        "control_p99_ratio": control_p99_ratio(Path(args.control)),
+    }
+    return append_entry(Path(args.out), entry, window=args.window,
+                        regression=args.regression)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -377,19 +377,29 @@ def slo_attainment_table() -> str:
     and goodput (ops/s completing within the target) — followed by the
     policy comparison the experiment exists for: protected-tenant p99 and
     total goodput per (scheme, policy), where the debt-aware ``feedback``
-    policy should dominate the static PR-2 policies."""
+    policy should dominate the static PR-2 policies and the v2 full-knob
+    PI controller should beat admission-only ``feedback`` on both axes.
+    Feedback rows carry the controller law and knob set
+    (``ControlPlane.knob_summary``)."""
     slo_rows = [r for r in _scenario_rows()
                 if "tenant" in r and r.get("slo_p99") is not None]
     if not slo_rows:
         return ""
-    out = ["| cell | tenant | policy | offered/s | admitted | shed |"
+    out = ["| cell | tenant | policy | ctl | offered/s | admitted | shed |"
            " p99 ms | slo ms | met | goodput/s |",
-           "|---|---|---|---|---|---|---|---|---|---|"]
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
     for r in slo_rows:
         a = r["admission"]
         star = "*" if r.get("protected") else ""
+        ctl = r.get("control")
+        law = "—"
+        if ctl:
+            law = ctl["controller"] + ("+knobs"
+                                       if len(ctl.get("knobs", [])) > 1
+                                       else "")
         out.append(
             f"| {r['cell']} | {r['tenant']}{star} | {r['policy']} "
+            f"| {law} "
             f"| {r['offered_rate']:.1f} "
             f"| {int(a['admitted'])} | {int(a['rejected'])} "
             f"| {r['latency_p']['p99']*1e3:.1f} "
@@ -509,10 +519,14 @@ def serving_table() -> str:
     return "\n".join(out)
 
 
-# series worth summarizing in the report (timelines carry ~30 more)
+# series worth summarizing in the report (timelines carry ~30 more);
+# the ctl.u / ctl.knob.* rows make the control plane's knob trajectory
+# visible next to the pressure signals that drove it
 _TIMELINE_SERIES = ("lsm.debt", "lsm.write_amp", "lsm.l0_files",
                     "ssd.util", "hdd.util", "ssd.zones.open",
-                    "adm.pressure", "ctl.attainment")
+                    "adm.pressure", "ctl.attainment", "ctl.u",
+                    "ctl.knob.pace", "ctl.knob.migration",
+                    "ctl.knob.cache_budget")
 
 
 def _spark(values, buckets: int = 12) -> str:

@@ -300,6 +300,28 @@ def validate_rows(rows, path: str = "<rows>",
                 if not isinstance(row.get("slo_met"), bool):
                     errors.append(f"{where}: slo_p99 rows must carry a "
                                   f"boolean slo_met")
+            # control-plane knob summary on feedback rows
+            # (ControlPlane.knob_summary)
+            ctl = row.get("control")
+            if ctl is not None:
+                if not isinstance(ctl, dict):
+                    errors.append(f"{where}: control must be an object")
+                else:
+                    if ctl.get("controller") not in ("aimd", "pi"):
+                        errors.append(
+                            f"{where}: control.controller="
+                            f"{ctl.get('controller')!r} not aimd|pi")
+                    if not isinstance(ctl.get("knobs"), list) \
+                            or not all(isinstance(k, str)
+                                       for k in ctl.get("knobs") or []):
+                        errors.append(f"{where}: control.knobs must be a "
+                                      f"list of knob names")
+                    for k in ("u", "pace", "migration", "cache_budget"):
+                        v = ctl.get(k)
+                        if not isinstance(v, (int, float)) \
+                                or not math.isfinite(v):
+                            errors.append(f"{where}: control.{k}={v!r} "
+                                          f"not a finite number")
         if "availability" in row:
             av = row["availability"]
             if not isinstance(av, (int, float)) or not 0 <= av <= 1:
@@ -381,14 +403,68 @@ def validate_timeline(obj, path: str = "<timeline>",
     return errors
 
 
+TRAJECTORY_FIELDS = ("git_sha", "date", "sim_speed_geomean",
+                     "read_path_speedup", "control_p99_ratio")
+
+
+def validate_trajectory(obj, path: str = "<trajectory>",
+                        strict: bool = False) -> List[str]:
+    """Lint the CI bench-trend artifact (``results/bench_trajectory.json``).
+
+    Schema: ``{"kind": "bench_trajectory", "entries": [{git_sha, date,
+    sim_speed_geomean, read_path_speedup, control_p99_ratio}]}`` —
+    one entry per CI run, appended by ``benchmarks/bench_trend.py``; the
+    speed fields are positive finite numbers, ``control_p99_ratio`` may
+    be null when no control rows were available to the run.
+    """
+    errors: List[str] = []
+    if not isinstance(obj, dict) or obj.get("kind") != "bench_trajectory":
+        errors.append(f"{path}: not a bench trajectory "
+                      f"(kind != 'bench_trajectory')")
+    elif not isinstance(obj.get("entries"), list):
+        errors.append(f"{path}: entries must be a list")
+    else:
+        for i, e in enumerate(obj["entries"]):
+            where = f"{path}.entries[{i}]"
+            if not isinstance(e, dict):
+                errors.append(f"{where}: entry is not an object")
+                continue
+            missing = [k for k in TRAJECTORY_FIELDS if k not in e]
+            if missing:
+                errors.append(f"{where}: missing fields {missing}")
+                continue
+            for k in ("git_sha", "date"):
+                if not isinstance(e[k], str) or not e[k]:
+                    errors.append(f"{where}: {k}={e[k]!r} not a non-empty "
+                                  f"string")
+            for k in ("sim_speed_geomean", "read_path_speedup"):
+                v = e[k]
+                if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                        or v <= 0:
+                    errors.append(f"{where}: {k}={v!r} not a positive "
+                                  f"finite number")
+            v = e["control_p99_ratio"]
+            if v is not None and (not isinstance(v, (int, float))
+                                  or not math.isfinite(v) or v <= 0):
+                errors.append(f"{where}: control_p99_ratio={v!r} not a "
+                              f"positive finite number or null")
+    if strict and errors:
+        raise ValueError(f"{len(errors)} trajectory violations:\n"
+                         + "\n".join(errors))
+    return errors
+
+
 def validate_file(path: Path) -> List[str]:
     try:
         data = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as exc:
         return [f"{path}: unreadable ({exc})"]
-    # dispatch on shape: timeline artifacts are dicts, row files are lists
+    # dispatch on shape: timeline/trajectory artifacts are dicts, row
+    # files are lists
     if isinstance(data, dict) and data.get("kind") == "timeline":
         return validate_timeline(data, str(path))
+    if isinstance(data, dict) and data.get("kind") == "bench_trajectory":
+        return validate_trajectory(data, str(path))
     return validate_rows(data, str(path))
 
 
@@ -405,6 +481,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         d = Path("results/storage")
         paths = [d / n for n in DEFAULT_TARGETS if (d / n).exists()]
         paths += sorted((d / "timelines").glob("*.json"))
+        traj = Path("results/bench_trajectory.json")
+        if traj.exists():
+            paths.append(traj)
     errors: List[str] = []
     for p in paths:
         errs = validate_file(p)
@@ -413,10 +492,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             status = "FAIL"
         else:
             data = json.loads(p.read_text())
-            status = (f"ok ({len(data['t'])} samples, "
-                      f"{len(data['series'])} series)"
-                      if isinstance(data, dict)
-                      else f"ok ({len(data)} rows)")
+            if isinstance(data, dict) and "entries" in data:
+                status = f"ok ({len(data['entries'])} entries)"
+            elif isinstance(data, dict):
+                status = (f"ok ({len(data['t'])} samples, "
+                          f"{len(data['series'])} series)")
+            else:
+                status = f"ok ({len(data)} rows)"
         print(f"[validate] {p}: {status}", flush=True)
     for e in errors:
         print(f"  {e}", flush=True)

@@ -140,12 +140,12 @@ class RouterKV:
 
     # -- ops ------------------------------------------------------------
     def put(self, key: int, value: Optional[bytes] = None,
-            tombstone: bool = False):
+            tombstone: bool = False, tenant: Optional[str] = None):
         s = yield from self._admit(key)
         tok = self._begin(s, key, key + 1)
         try:
             res = yield from self.cluster.shards[s].tree.put(
-                key, value, tombstone=tombstone)
+                key, value, tombstone=tombstone, tenant=tenant)
         finally:
             self._end(s, tok)
         return res

@@ -64,6 +64,14 @@ class HintedCache:
     def _writable_zone(self) -> Optional[Zone]:
         if self.active is not None and self.active.remaining >= self.block_size:
             return self.active
+        # Controller-driven reservation knob (repro.obs.control): when the
+        # backend caps cache_zone_budget, stay within it by recycling our
+        # own oldest zone instead of claiming another reserved zone.
+        budget = self.backend.cache_zone_budget
+        if budget is not None and len(self.zones) >= budget:
+            if budget <= 0 or not self.zones:
+                return None
+            self.evict_oldest_zone()
         # Need a fresh zone from the reserved WAL/cache pool.
         zone = self.backend.acquire_reserved_zone("cache")
         if zone is None:

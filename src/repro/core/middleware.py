@@ -82,6 +82,11 @@ class HybridZonedBackend:
         # ---- optional components ---------------------------------------
         self.cache: Optional[HintedCache] = (
             HintedCache(self, block_size) if enable_cache else None)
+        # dynamic cap on cache zones (repro.obs.control's reservation
+        # knob): None = unlimited (default, behaviour unchanged); an int
+        # makes HintedCache refuse/evict beyond that many zones, freeing
+        # reserved zones for the WAL under write pressure
+        self.cache_zone_budget: Optional[int] = None
         self.migrator: Optional[Migrator] = (
             Migrator(self, rate_limit=migration_rate, chunk_bytes=io_chunk,
                      basic_low_levels=basic_migration_low_levels)
@@ -483,18 +488,20 @@ class HybridZonedBackend:
         return records
 
     def wal_attribute(self, records, gen: int, key: Optional[int] = None,
-                      tomb: bool = False,
-                      value: Optional[bytes] = None) -> None:
+                      tomb: bool = False, value: Optional[bytes] = None,
+                      tenant: Optional[str] = None) -> None:
         """Attribute a group-committed batch's bytes to MemTable generation
         ``gen`` and log the logical record for crash replay.
 
         The payload is the durable mirror of the MemTable insert that just
         happened: on ``DB.reopen()`` the live generations' payloads are
-        replayed back into fresh MemTables, in the original insert order."""
+        replayed back into fresh MemTables, in the original insert order.
+        ``tenant`` rides along so replay rebuilds the per-tenant
+        debt-attribution tallies (``MemTable.tenant_objs``) too."""
         for rec in records:
             rec["gens"].add(gen)
         if key is not None:
-            self._wal_payloads[gen].append((key, tomb, value))
+            self._wal_payloads[gen].append((key, tomb, value, tenant))
 
     def _wal_writer(self):
         try:
@@ -673,6 +680,34 @@ class AdmissionConfig:
         multiplicative decrease factor, additive increase step and rate
         floor (both as fractions of the tenant's base rate), and the
         p99/target ratio below which additive increase engages.
+    feedback_controller
+        Which control law drives the ``feedback`` policy's knobs:
+        ``"aimd"`` (default, the PR-5 loop unchanged) or ``"pi"`` — a
+        proportional-integral controller with anti-windup
+        (``repro.obs.control.PIController``) on the worst protected
+        p99/target ratio, emitting one smooth admission multiplier
+        instead of AIMD's sawtooth.
+    feedback_knobs
+        Which actuators the control plane drives (any subset of
+        ``repro.obs.control.KNOBS``): ``"admission"`` (per-tenant
+        token-bucket rates — the only PR-5 knob), ``"compaction"``
+        (SILK-style pacing of background compaction I/O via
+        ``LSMTree.compaction_pace``), ``"migration"`` (scaling
+        ``Migrator.rate_limit``), ``"cache"`` (the backend's
+        ``cache_zone_budget``).  Defaults to admission-only, matching v1.
+    feedback_kp / feedback_ki
+        PI gains (per unit of p99/target ratio error); only read when
+        ``feedback_controller == "pi"``.
+    feedback_smooth
+        EWMA smoothing factor in (0, 1] applied to the noisy per-tick
+        p99/target measurement before the PI law sees it (1 = unsmoothed).
+    feedback_rise
+        Optional slew-rate limit on the PI actuation level's *recovery*
+        (max increase of ``u`` per control period; ``None`` = unlimited).
+        Throttling down stays unlimited — pressure must be cut within
+        one period — but bounding the climb back keeps a high-gain PI
+        from re-admitting a burst the moment one good p99 window lands
+        (the overshoot half of the limit cycle).
     """
 
     policy: str = "none"
@@ -690,6 +725,12 @@ class AdmissionConfig:
     feedback_increase: float = 0.08
     feedback_headroom: float = 0.8
     feedback_floor: float = 0.02
+    feedback_controller: str = "aimd"
+    feedback_knobs: Tuple[str, ...] = ("admission",)
+    feedback_kp: float = 0.6
+    feedback_ki: float = 0.15
+    feedback_smooth: float = 0.5
+    feedback_rise: Optional[float] = None
 
     def __post_init__(self):
         self.bucket_burst = max(float(self.bucket_burst), 1.0)
@@ -697,6 +738,10 @@ class AdmissionConfig:
             self.bucket_rates = {
                 t: (rate, max(float(burst), 1.0))
                 for t, (rate, burst) in self.bucket_rates.items()}
+        self.feedback_knobs = tuple(self.feedback_knobs)
+        if self.feedback_controller not in ("aimd", "pi"):
+            raise ValueError("feedback_controller must be 'aimd' or 'pi', "
+                             f"got {self.feedback_controller!r}")
 
 
 class AdmissionController:

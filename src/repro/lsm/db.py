@@ -330,14 +330,26 @@ class DB:
         replayed = 0
         for g in gens:
             mt = MemTable(gen=g)
-            for key, tomb, value in be._wal_payloads.get(g, ()):
+            for key, tomb, value, tenant in be._wal_payloads.get(g, ()):
                 mt.data[key] = (tomb, value)
+                # re-attribute the record so per-tenant debt attribution
+                # (MemTable.tenant_objs -> SST lineage) survives the crash
+                mt.writes += 1
+                if tenant is not None:
+                    mt.tenant_objs[tenant] = \
+                        mt.tenant_objs.get(tenant, 0) + 1
                 replayed += 1
             tree.immutables.append(mt)
         # the new active generation must exceed every generation ever used,
         # or a later flush could reclaim the new generation's WAL records
         tree.memtable = MemTable(gen=old.memtable.gen + 1)
         self.tree = tree
+        # the SLO control plane's rate overrides are volatile controller
+        # state, but they live on the (surviving) AdmissionController —
+        # without this reset a restarted-from-scratch ControlPlane would
+        # inherit the pre-crash throttle levels (regression-tested by
+        # tests/test_control_v2.py)
+        self.admission.rate_overrides.clear()
         # restart background machinery (placement monitor, migrator loop)
         be.start()
         tree._kick_background()

@@ -77,6 +77,10 @@ class LSMConfig:
 class MemTable:
     gen: int
     data: Dict[int, Tuple[bool, Optional[bytes]]] = field(default_factory=dict)
+    # debt-attribution lineage: write volume into this memtable, total and
+    # per originating tenant (puts without a tenant only bump ``writes``)
+    writes: int = 0
+    tenant_objs: Dict[str, int] = field(default_factory=dict)
 
     def __len__(self) -> int:
         return len(self.data)
@@ -112,6 +116,11 @@ class LSMTree:
         self._next_delayed_write = 0.0
         self._debt_prev = 0.0
         sim.process(self._delay_controller())
+        # SILK-style compaction pacing knob (repro.obs.control): background
+        # compaction I/O beyond L0 is stretched by 1/pace, deferring debt
+        # work under foreground pressure.  1.0 = full speed (no extra
+        # yields, so default behaviour is event-for-event unchanged).
+        self.compaction_pace = 1.0
         self.block_cache = BlockCache(cfg.block_cache_blocks, self._on_evict)
         self.stats: Dict[str, float] = {
             "puts": 0, "gets": 0, "hits": 0, "scans": 0,
@@ -154,6 +163,35 @@ class LSMTree:
     def compaction_debt(self) -> int:
         return sum(max(0, self._level_bytes[l] - self.cfg.target_of(l))
                    for l in range(self.cfg.num_levels))
+
+    def debt_by_tenant(self) -> Dict[str, float]:
+        """Per-tenant attribution of :meth:`compaction_debt`.
+
+        Each over-target level's overflow is split by the level's tenant
+        byte composition (carried on SSTs through the flush -> compaction
+        lineage); bytes written without a tenant tag land in the ``""``
+        bucket.  By construction ``sum(values()) == compaction_debt()`` up
+        to float rounding — the conservation law the controller (and
+        ``tests/test_control_v2.py``) relies on."""
+        out: Dict[str, float] = {}
+        for lvl in range(self.cfg.num_levels):
+            total = self._level_bytes[lvl]
+            over = total - self.cfg.target_of(lvl)
+            if over <= 0 or total <= 0:
+                continue
+            attr: Dict[str, float] = {}
+            for s in self.levels[lvl]:
+                for t, b in getattr(s, "tenant_bytes", {}).items():
+                    attr[t] = attr.get(t, 0.0) + b
+            tagged = 0.0
+            for t, b in attr.items():
+                share = over * (b / total)
+                out[t] = out.get(t, 0.0) + share
+                tagged += share
+            rest = over - tagged
+            if rest > 0:
+                out[""] = out.get("", 0.0) + rest
+        return out
 
     def _delay_controller(self):
         """Adapt the delayed write rate to whether compactions keep up."""
@@ -209,16 +247,23 @@ class LSMTree:
         reg.gauge(f"{p}lsm.delay_rate", lambda: self._delay_rate)
         reg.gauge(f"{p}lsm.write_stalls", lambda: self.stats["write_stalls"])
         reg.gauge(f"{p}lsm.block_cache_hit_rate", self.block_cache.hit_rate)
+        reg.gauge(f"{p}lsm.compaction_pace",
+                  lambda: float(self.compaction_pace))
         reg.collector(lambda: {
             f"{p}lsm.compaction_rate": self.stats["compactions"],
             f"{p}lsm.flush_rate": self.stats["flushes"],
         }, rate=True, name=f"{p}lsm.rates")
+        reg.collector(lambda: {
+            f"{p}lsm.debt.by_tenant.{t or 'untagged'}": v
+            for t, v in self.debt_by_tenant().items()
+        }, rate=False, name=f"{p}lsm.debt.by_tenant")
 
     # ==================================================================
     # write path
     # ==================================================================
     def put(self, key: int, value: Optional[bytes] = None,
-            tombstone: bool = False) -> Generator:
+            tombstone: bool = False,
+            tenant: Optional[str] = None) -> Generator:
         self.stats["puts"] += 1
         # stall while memtables are full or L0 is overwhelmed
         while (len(self.immutables) >= self.cfg.max_memtables - 1
@@ -240,12 +285,17 @@ class LSMTree:
                 yield target - self.sim.now   # bare-delay: no Event
         wal_recs = yield from self.backend.wal_append(self.cfg.obj_size)
         stored = value if self.cfg.store_values else None
-        self.memtable.data[key] = (tombstone, stored)
+        mt = self.memtable
+        mt.data[key] = (tombstone, stored)
+        mt.writes += 1
+        if tenant is not None:
+            mt.tenant_objs[tenant] = mt.tenant_objs.get(tenant, 0) + 1
         # attribute the WAL bytes (and the logical record, for crash
         # replay) to the generation the data actually landed in (the
         # memtable may have rotated while queued)
-        self.backend.wal_attribute(wal_recs, self.memtable.gen,
-                                   key=key, tomb=tombstone, value=stored)
+        self.backend.wal_attribute(wal_recs, mt.gen, key=key,
+                                   tomb=tombstone, value=stored,
+                                   tenant=tenant)
         if len(self.memtable) >= self.cfg.memtable_max_objs:
             self._rotate_memtable()
 
@@ -316,8 +366,21 @@ class LSMTree:
                         for k, (t, v) in m.data.items():
                             values.setdefault(k, v)
                 keys, tb = merge_runs(runs, tombs)
+                # flush->SST lineage: the batch's per-tenant write-volume
+                # shares become each output SST's tenant byte composition
+                tally: Dict[str, int] = {}
+                writes = 0
+                for m in batch:
+                    writes += m.writes
+                    for t, c in m.tenant_objs.items():
+                        tally[t] = tally.get(t, 0) + c
+                comp = ({t: c / writes for t, c in tally.items()}
+                        if writes > 0 else {})
                 for ks, tbs in self._split_sst(keys, tb):
                     sst = self._make_sst(ks, tbs, level=0, values=values)
+                    if comp:
+                        sst.tenant_bytes = {
+                            t: f * sst.size_bytes for t, f in comp.items()}
                     self.backend.on_hint(FlushHint(sst_id=sst.sid))
                     yield from self.backend.write_sst(sst, source="flush")
                     self._install_sst(sst, 0)
@@ -417,13 +480,23 @@ class LSMTree:
             self.backend.on_hint(CompactionTriggerHint(
                 cid=cid, selected_sst_ids=tuple(s.sid for s in inputs),
                 target_level=target))
-            # read inputs sequentially (interleaved with other jobs)
+            # read inputs sequentially (interleaved with other jobs);
+            # beyond L0 each chunk is paced by the controller's knob —
+            # stretching I/O by 1/pace defers debt work under foreground
+            # pressure (SILK).  L0 compaction is exempt: clearing L0 is
+            # what unblocks stalled foreground writes.
             for s in inputs:
                 dev = self.backend.device_of(s.tier)
                 rem = s.size_bytes
                 while rem > 0:
                     n = min(self.backend.io_chunk, rem)
+                    t_io = self.sim.now
                     yield dev.read(n, random=False, tag="compact")
+                    pace = self.compaction_pace
+                    if level > 0 and pace < 1.0:
+                        dt = self.sim.now - t_io
+                        if dt > 0:
+                            yield dt * (1.0 / max(pace, 0.05) - 1.0)
                     rem -= n
             # merge: newest version wins; inputs ordered newest-priority first
             src_lvl = [s for s in inputs if s.level == level]
@@ -445,14 +518,33 @@ class LSMTree:
             if bottom and len(keys):
                 keep = ~tombs
                 keys, tombs = keys[keep], tombs[keep]
+            # compaction lineage: outputs inherit the inputs' pooled
+            # tenant byte composition, scaled to each output's size
+            in_attr: Dict[str, float] = {}
+            in_bytes = 0
+            for s in inputs:
+                in_bytes += s.size_bytes
+                for t, b in getattr(s, "tenant_bytes", {}).items():
+                    in_attr[t] = in_attr.get(t, 0.0) + b
+            comp = ({t: b / in_bytes for t, b in in_attr.items()}
+                    if in_bytes > 0 else {})
             outputs: List[SST] = []
             for ks, tbs in self._split_sst(keys, tombs):
                 if not len(ks):
                     continue
                 sst = self._make_sst(ks, tbs, level=target, values=values)
+                if comp:
+                    sst.tenant_bytes = {
+                        t: f * sst.size_bytes for t, f in comp.items()}
                 self.backend.on_hint(CompactionOutputHint(
                     cid=cid, sst_id=sst.sid, level=target))
+                t_io = self.sim.now
                 yield from self.backend.write_sst(sst, source="compaction")
+                pace = self.compaction_pace
+                if level > 0 and pace < 1.0:
+                    dt = self.sim.now - t_io
+                    if dt > 0:
+                        yield dt * (1.0 / max(pace, 0.05) - 1.0)
                 outputs.append(sst)
             # install outputs, delete inputs
             for s in inputs:

@@ -57,6 +57,36 @@ class Counter:
         self.value += n
 
 
+class Ewma:
+    """Exponentially-weighted moving average over irregular updates.
+
+    The control plane's measurement filter: per-tick p99/target ratios are
+    noisy (a window of a few hundred samples), and feeding them raw into a
+    PI law turns measurement noise into actuator jitter.  ``update(x)``
+    folds in one observation with weight ``alpha`` (1.0 = no smoothing —
+    the filter is transparent) and returns the new smoothed value;
+    ``value`` holds the current estimate (``None`` before any update)."""
+
+    __slots__ = ("alpha", "value")
+
+    def __init__(self, alpha: float = 0.5) -> None:
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1]: {alpha}")
+        self.alpha = float(alpha)
+        self.value: Optional[float] = None
+
+    def update(self, x: float) -> float:
+        x = float(x)
+        if self.value is None or self.alpha >= 1.0:
+            self.value = x
+        else:
+            self.value += self.alpha * (x - self.value)
+        return self.value
+
+    def reset(self) -> None:
+        self.value = None
+
+
 class MetricsRegistry:
     """Bounded ring-buffer time series over DES-clock samples.
 

@@ -283,6 +283,15 @@ class OpenLoopResult:
                         target) — the SLO-attainment quantity
                         ``bench_control`` compares policies on.
 
+    Multi-tenant rows under policy ``feedback`` also carry:
+
+    ``control``         end-of-run control-plane knob summary
+                        (``ControlPlane.knob_summary``): ``controller``
+                        (``"aimd"``/``"pi"``), ``knobs`` (enabled actuator
+                        names), final actuation level ``u`` and the
+                        resulting ``pace`` / ``migration`` /
+                        ``cache_budget`` knob values (-1.0 = unlimited).
+
     Fault-injection rows (``run_open_loop(faults=...)`` or
     ``run_multi_tenant(faults=...)``) additionally carry:
 
@@ -336,6 +345,8 @@ class OpenLoopResult:
     goodput: Optional[float] = None
     slo_p99: Optional[float] = None
     slo_met: Optional[bool] = None
+    # set only on feedback-policy tenant rows (ControlPlane.knob_summary)
+    control: Optional[Dict] = None
     # set only on fault-injection rows (run_open_loop(faults=...) and
     # run_multi_tenant(faults=...))
     fault: Optional[str] = None
@@ -384,6 +395,8 @@ class OpenLoopResult:
                      goodput=self.goodput)
             if self.slo_p99 is not None:
                 d.update(slo_p99=self.slo_p99, slo_met=self.slo_met)
+            if self.control is not None:
+                d["control"] = self.control
         if self.fault is not None:
             d.update(fault=self.fault, availability=self.availability)
             if self.stall_p is not None:
@@ -730,7 +743,8 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
             targets={t.name: t.slo_p99 for t in tenants
                      if t.protected and t.slo_p99},
             debt_gauge=ctrl.debt_gauge,
-            registry=getattr(db, "metrics", None))
+            registry=getattr(db, "metrics", None),
+            db=db)
         control.start()
 
     specs = [YCSB[t.workload] if isinstance(t.workload, str) else t.workload
@@ -744,6 +758,9 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
         rels.append(t.arrival.times(rng, duration))
         streams.append(OpStream(db, specs[ti], n_ops=len(rels[ti]),
                                 n_keys=n_keys, seed=seed + 9973 * ti))
+        # tag writes with the originating tenant so flushed bytes (and
+        # hence compaction debt) attribute back to them
+        streams[-1].tenant = t.name
     m_at = (np.concatenate(rels) if rels else np.empty(0, np.float64))
     m_ti = np.concatenate([np.full(len(r), ti, np.int64)
                            for ti, r in enumerate(rels)]) \
@@ -898,8 +915,11 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
         busy_span = max(last - t0, 1e-12)
     ctrl.queue_gauge = None   # this run's queue is dead; don't let later
     # DB.submit calls read pressure off it
+    control_summary = None
     if control is not None:
-        control.stop()        # retire the AIMD daemon loop with the run
+        # snapshot before stop(): stop restores every knob to neutral
+        control_summary = control.knob_summary()
+        control.stop()        # retire the control daemon loop with the run
 
     extras = collect_extras(db)
     results: List[OpenLoopResult] = []
@@ -959,6 +979,7 @@ def run_multi_tenant(db, tenants: Sequence[TenantSpec], duration: float,
             op_counts=dict(streams[ti].counts), extras=extras,
             tenant=t.name, policy=ctrl.policy_label, protected=t.protected,
             admission=ctrl.admission_summary(t.name),
+            control=control_summary,
             **slo_fields, **fault_fields))
     return MultiTenantResult(
         scheme=db.scheme, policy=ctrl.policy_label, duration=duration,

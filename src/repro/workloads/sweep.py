@@ -335,6 +335,65 @@ def build_grid(schemes: Sequence[str], workloads: Sequence[str],
         shards=list(shards), routing=routing, rebalance=list(rebalance))
 
 
+def build_control_grid(schemes: Sequence[str], *, duration: float,
+                       warmup: float, key_div: int, seed: int = 1,
+                       verbose: bool = False,
+                       timelines: Optional[str] = None) -> ScenarioMatrix:
+    """A small multi-tenant control-plane matrix (CLI ``--control``).
+
+    One protected + one bulk tenant under the full-knob feedback policy
+    (PI controller driving admission, compaction pacing, migration
+    aggressiveness and the hinted-cache reservation) — the same
+    construction as ``benchmarks/storage_exps.py::bench_control`` at
+    smoke sizing.  The CI grid-smoke job runs this grid twice (2 workers
+    vs inline, telemetry on) and requires byte-identical rows: the
+    control plane is a sim process, so its ticks — and every knob write
+    they make — are part of the deterministic event schedule.
+    """
+    from repro.core.middleware import AdmissionConfig
+    from repro.lsm import SCALE
+    from repro.zoned.device import MiB
+
+    from .runner import TenantSpec
+    from .ycsb import WorkloadSpec
+
+    factory = GridDBFactory(key_div=key_div)
+    spec = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
+    bspec = WorkloadSpec("bulkmix", read=0.5, update=0.5, alpha=0.9)
+    # anchor rates/SLOs to a seeded closed-loop probe of the weakest
+    # baseline, exactly as calibrated_arrivals() does for the YCSB grid
+    probe = factory("B3", 20)
+    pr = run_workload(probe, spec, n_ops=2000, n_keys=probe.n_keys,
+                      seed=seed)
+    svc = max(pr.throughput, 1e-6)
+    slo_prot = round(1.5 * pr.latency_p["p99"], 4)
+    debt_th = round(1.5 * float(probe.tree.compaction_debt())
+                    + 256 * MiB / SCALE, 1)
+    bulk_rate = round(1.2 * svc, 4)
+    if verbose:
+        print(f"[sweep] control probe: service ~{svc:.1f} ops/s, "
+              f"prot slo {slo_prot * 1e3:.1f}ms", flush=True)
+    mix = [
+        TenantSpec("prot", spec, PoissonArrivals(round(0.25 * svc, 4)),
+                   protected=True, slo_p99=slo_prot),
+        TenantSpec("bulk", bspec, PoissonArrivals(bulk_rate),
+                   slo_p99=round(1.5 * slo_prot, 4)),
+    ]
+    policy = AdmissionConfig(
+        policy="feedback", bucket_rates={"bulk": (bulk_rate, 20.0)},
+        debt_threshold=debt_th, label="pi+knobs", queue_threshold=8,
+        feedback_interval=2.5, feedback_window=60,
+        feedback_controller="pi", feedback_kp=2.0, feedback_ki=0.5,
+        feedback_smooth=1.0, feedback_rise=0.08,
+        feedback_knobs=("admission", "compaction", "migration", "cache"))
+    return ScenarioMatrix(
+        schemes=list(schemes), workloads=[], arrivals=[], tenants=[mix],
+        policies=[policy], ssd_zone_budgets=[20],
+        duration=duration, warmup=warmup, max_concurrency=16,
+        key_div=key_div, seed=seed, db_factory=factory,
+        telemetry=timelines is not None, timeline_dir=timelines)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     from repro.lsm.db import SCHEMES
     ap = argparse.ArgumentParser(
@@ -378,20 +437,32 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="enable per-cell telemetry (repro.obs) and write "
                          "one timeline artifact per cell into DIR; rows "
                          "are unchanged")
+    ap.add_argument("--control", action="store_true",
+                    help="run the small multi-tenant control-plane grid "
+                         "(prot+bulk tenants, full-knob PI feedback "
+                         "policy) instead of the YCSB grid; honours "
+                         "--schemes/--duration/--warmup/--key-div")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    matrix = build_grid(
-        [s for s in args.schemes.split(",") if s],
-        [w for w in args.workloads.split(",") if w],
-        [a for a in args.arrivals.split(",") if a],
-        [int(b) for b in args.budgets.split(",") if b],
-        duration=args.duration, warmup=args.warmup,
-        key_div=args.key_div, seed=args.seed,
-        timelines=args.timelines,
-        shards=[int(s) for s in args.shards.split(",") if s],
-        routing=args.routing,
-        rebalance=[False, True] if args.rebalance else [False])
+    if args.control:
+        matrix = build_control_grid(
+            [s for s in args.schemes.split(",") if s],
+            duration=args.duration, warmup=args.warmup,
+            key_div=args.key_div, seed=args.seed,
+            verbose=not args.quiet, timelines=args.timelines)
+    else:
+        matrix = build_grid(
+            [s for s in args.schemes.split(",") if s],
+            [w for w in args.workloads.split(",") if w],
+            [a for a in args.arrivals.split(",") if a],
+            [int(b) for b in args.budgets.split(",") if b],
+            duration=args.duration, warmup=args.warmup,
+            key_div=args.key_div, seed=args.seed,
+            timelines=args.timelines,
+            shards=[int(s) for s in args.shards.split(",") if s],
+            routing=args.routing,
+            rebalance=[False, True] if args.rebalance else [False])
 
     validate = None
     try:  # optional: schema linting before every write (CI installs it)

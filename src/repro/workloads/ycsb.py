@@ -140,6 +140,10 @@ class OpStream:
         self.db = db
         self.counts = {name: 0 for name in OP_NAMES.values()}
         self._hot_step = spec.hotspot_step or max(1, n_keys // 8)
+        # originating tenant for write attribution (set by the
+        # multi-tenant runner): rides every put() into the tree, tagging
+        # flushed bytes for per-tenant compaction-debt attribution
+        self.tenant: Optional[str] = None
 
     @property
     def tree(self):
@@ -183,21 +187,24 @@ class OpStream:
         """Generator running op ``i`` against the tree (virtual-timed)."""
         code = int(self.ops.codes[i])
         rank = int(self.ops.args[i])
+        # tenant tag only when set: untagged streams call put(key) exactly
+        # as before, keeping single-stream runs event-for-event unchanged
+        kw = {"tenant": self.tenant} if self.tenant is not None else {}
         if code == READ:
             yield from self.tree.get(self.resolve(code, rank, i))
         elif code == UPDATE:
-            yield from self.tree.put(self.resolve(code, rank, i))
+            yield from self.tree.put(self.resolve(code, rank, i), **kw)
         elif code == INSERT:
             key = self.frontier
             self.frontier += 1
-            yield from self.tree.put(key)
+            yield from self.tree.put(key, **kw)
         elif code == SCAN:
             yield from self.tree.scan(self.resolve(code, rank, i),
                                       int(self.ops.scan_lens[i]))
         elif code == RMW:
             key = self.resolve(code, rank, i)
             yield from self.tree.get(key)
-            yield from self.tree.put(key)
+            yield from self.tree.put(key, **kw)
         self.counts[OP_NAMES[code]] += 1
 
 

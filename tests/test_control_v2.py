@@ -1,0 +1,336 @@
+"""Control plane v2: PI law, anti-windup, knob actuation, and per-tenant
+compaction-debt attribution.
+
+Covers the PR's tentpole contracts:
+
+* :class:`repro.obs.PIController` — step response, clamping, and
+  conditional-integration anti-windup (the integral must freeze under
+  saturation so recovery is prompt once pressure clears).
+* PI vs AIMD on the same synthetic pressure trace: both converge, the PI
+  trajectory is smoother (no multiplicative-decrease cliff).
+* Knob mapping: ``u = 1`` is neutral for every actuator; ``u = 0`` pins
+  compaction pace at its floor, migration at its minimum scale, the
+  cache budget at zero; ``stop()`` restores neutral.
+* Debt attribution: ``LSMTree.debt_by_tenant`` conserves
+  ``compaction_debt()`` exactly (tagged shares + untagged remainder)
+  through flushes, compactions, and crash/recovery, and the write-volume
+  shares order correctly.
+* Crash semantics: ``DB.reopen`` clears the control plane's
+  ``rate_overrides`` (volatile controller state must not survive a
+  restart-from-scratch of the loop).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from conftest import tiny_scenario
+from repro.core.middleware import AdmissionConfig, AdmissionController
+from repro.lsm import DB
+from repro.obs import ControlPlane, Ewma, PIController
+from repro.obs.control import CACHE_RELEASE_U, MIGRATION_SCALE, PACE_FLOOR
+from repro.workloads import run_load
+from repro.zoned import Sim
+
+
+# ---------------------------------------------------------------------
+# PIController unit behaviour
+# ---------------------------------------------------------------------
+def test_pi_step_response_tracks_setpoint():
+    pi = PIController(kp=0.6, ki=0.15, setpoint=1.0, lo=0.05, hi=1.0)
+    # at setpoint: stays at the neutral output
+    assert pi.update(1.0, 1.0) == pytest.approx(1.0)
+    # step overload (measurement 1.5x the target): monotone decrease
+    us = [pi.update(1.5, 1.0) for _ in range(12)]
+    assert us[0] < 1.0
+    assert all(b <= a + 1e-12 for a, b in zip(us, us[1:]))
+    assert us[-1] < 0.5
+    # step back under the target: monotone recovery to the ceiling
+    us = [pi.update(0.5, 1.0) for _ in range(60)]
+    assert all(b >= a - 1e-12 for a, b in zip(us, us[1:]))
+    assert us[-1] == pytest.approx(1.0)
+    # output always clamped
+    assert all(0.05 <= u <= 1.0 for u in us)
+
+
+def test_pi_anti_windup_freezes_integral_and_recovers_fast():
+    pi = PIController(kp=0.6, ki=0.15, setpoint=1.0, lo=0.05, hi=1.0)
+    # mild sustained overload: the integral accumulates for ~9 steps,
+    # walking u down to the floor ...
+    for _ in range(20):
+        pi.update(1.5, 1.0)
+    assert pi.last_u == pytest.approx(0.05)
+    frozen = pi.integral
+    assert frozen < 0.0
+    # ... and conditional integration freezes it there: 200 more
+    # saturated steps must not wind it any further
+    for _ in range(200):
+        pi.update(1.5, 1.0)
+    assert pi.integral == pytest.approx(frozen)
+    # pressure clears: recovery completes within a handful of steps
+    # instead of the windup lag (an unconditional integral would first
+    # have to unwind 200 * e * dt before u moved at all)
+    us = [pi.update(0.5, 1.0) for _ in range(10)]
+    assert us[0] > 0.5          # off the floor on the very first step
+    assert us[-1] == pytest.approx(1.0)
+
+
+def test_pi_validates_bounds_and_resets():
+    with pytest.raises(ValueError):
+        PIController(kp=1.0, ki=0.1, lo=1.0, hi=1.0)
+    pi = PIController(kp=0.6, ki=0.15, lo=0.0, hi=1.0)
+    pi.update(2.0, 1.0)
+    assert pi.integral != 0.0
+    pi.reset()
+    assert pi.integral == 0.0 and pi.last_u == pytest.approx(1.0)
+
+
+def test_ewma_filter():
+    f = Ewma(alpha=0.5)
+    assert f.update(2.0) == pytest.approx(2.0)     # first sample passes
+    assert f.update(0.0) == pytest.approx(1.0)
+    assert f.update(0.0) == pytest.approx(0.5)
+    f.reset()
+    assert f.value is None
+    with pytest.raises(ValueError):
+        Ewma(alpha=0.0)
+
+
+# ---------------------------------------------------------------------
+# PI vs AIMD on a synthetic pressure trace
+# ---------------------------------------------------------------------
+def _plane(controller: str) -> ControlPlane:
+    sim = Sim()
+    cfg = AdmissionConfig(policy="feedback", protected=frozenset(["a"]),
+                          bucket_rates={"b": (100.0, 5.0)},
+                          feedback_controller=controller,
+                          feedback_interval=1.0,
+                          feedback_decrease=0.5, feedback_increase=0.1,
+                          feedback_headroom=0.8, feedback_floor=0.05,
+                          feedback_kp=0.6, feedback_ki=0.15,
+                          feedback_smooth=0.5)
+    ctrl = AdmissionController(sim, None, cfg)
+    ctrl.tenant_counters("a")
+    ctrl.tenant_counters("b")
+    return ControlPlane(sim, ctrl, targets={"a": 0.1})
+
+
+def test_pi_vs_aimd_on_square_wave_pressure():
+    """Square wave: 30 ticks at 1.5x the target, 30 ticks at 0.6x, twice.
+
+    Both laws must throttle under overload and recover in the lull; the
+    PI trajectory must be smoother — its largest single-tick move stays
+    below AIMD's multiplicative-decrease cliff (u -> u/2)."""
+    trace = ([1.5] * 30 + [0.6] * 30) * 2
+    traj = {}
+    for law in ("aimd", "pi"):
+        plane = _plane(law)
+        us = []
+        for worst in trace:
+            if law == "pi":
+                plane._tick_pi(worst)
+            else:
+                plane._tick_aimd(worst, worst > 1.0)
+            us.append(plane._u)
+        traj[law] = np.asarray(us)
+    for law, us in traj.items():
+        # throttled by the end of each overload phase ...
+        assert us[29] < 0.3, (law, us[:30])
+        assert us[89] < 0.3, (law, us[60:90])
+        # ... recovered by the end of each lull
+        assert us[59] > 0.9, (law, us[30:60])
+        assert us[119] > 0.9, (law, us[90:])
+        # throttling also drives the controlled tenant's rate override
+        assert plane.ctrl.rate_overrides or law == "aimd"
+    steps = {law: float(np.abs(np.diff(us)).max())
+             for law, us in traj.items()}
+    assert steps["pi"] < steps["aimd"], steps
+    # AIMD's first decrease is the u -> u/2 cliff
+    assert steps["aimd"] == pytest.approx(0.5)
+
+
+def test_pi_rate_override_biased_by_debt_share():
+    """With a db binding faked to attribute debt 3:1 between the two
+    controlled tenants, the bigger debtor gets the harder throttle
+    (u ** (1 + share) ordering)."""
+    plane = _plane("pi")
+    plane.ctrl.tenant_counters("c")
+    plane.ctrl.cfg = plane.ctrl.cfg  # cfg read-through stays live
+
+    class _FakeTree:
+        def debt_by_tenant(self):
+            return {"b": 300.0, "c": 100.0, "": 50.0}
+
+    class _FakeDB:
+        tree = _FakeTree()
+
+    plane.db = _FakeDB()
+    plane.ctrl.cfg.bucket_rates["c"] = (100.0, 5.0)
+    shares = plane.debt_shares()
+    assert shares["b"] == pytest.approx(0.75)
+    assert shares["c"] == pytest.approx(0.25)
+    assert "" not in shares
+    for _ in range(4):
+        plane._tick_pi(1.5)
+    rates = plane.ctrl.rate_overrides
+    assert rates["b"] < rates["c"] < 100.0, rates
+
+
+# ---------------------------------------------------------------------
+# knob actuation against a real store
+# ---------------------------------------------------------------------
+def test_knob_mapping_neutral_floor_and_stop():
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    cfg = AdmissionConfig(policy="feedback", protected=frozenset(["a"]),
+                          feedback_knobs=("admission", "compaction",
+                                          "migration", "cache"))
+    ctrl = db.fresh_admission(cfg)
+    plane = ControlPlane(db.sim, ctrl, targets={"a": 0.1},
+                         debt_gauge=ctrl.debt_gauge, db=db)
+    mig_base = db.backend.migrator.rate_limit
+    # u = 1: pace/cache neutral, migration boosted to its lull maximum
+    plane._apply_knobs(1.0)
+    assert db.tree.compaction_pace == pytest.approx(1.0)
+    assert db.backend.migrator.rate_limit \
+        == pytest.approx(mig_base * MIGRATION_SCALE[1])
+    assert db.backend.cache_zone_budget is None
+    # u = 0 pins every knob at its pressure extreme
+    plane._apply_knobs(0.0)
+    assert db.tree.compaction_pace == pytest.approx(PACE_FLOOR)
+    assert db.backend.migrator.rate_limit \
+        == pytest.approx(mig_base * MIGRATION_SCALE[0])
+    assert db.backend.cache_zone_budget == 0
+    # mid-range: partial budget, partial pace
+    plane._apply_knobs(0.5)
+    assert PACE_FLOOR < db.tree.compaction_pace < 1.0
+    assert isinstance(db.backend.cache_zone_budget, int)
+    assert db.backend.cache_zone_budget >= 0
+    assert 0.5 < CACHE_RELEASE_U  # below the release point: budget stays
+    # stop() restores neutral so the next run starts from default state
+    plane.stop()
+    assert db.tree.compaction_pace == pytest.approx(1.0)
+    assert db.backend.migrator.rate_limit == pytest.approx(mig_base)
+    assert db.backend.cache_zone_budget is None
+    assert plane.knob_summary()["pace"] == pytest.approx(1.0)
+
+
+def test_compaction_pace_defers_background_io():
+    """Paced compaction (pace < 1) takes longer in virtual time than the
+    same compaction unpaced — the SILK-style deferral — and the default
+    pace of 1.0 adds zero delay (event-identical to pre-v2 runs)."""
+    spans = {}
+    for pace in (1.0, 0.3):
+        db = DB("B3", tiny_scenario(), store_values=True)
+        db.tree.compaction_pace = pace
+        run_load(db, n_keys=1500)
+        t0 = db.sim.now
+        db.flush_all()
+        db.drain()                      # drain all compactions
+        spans[pace] = db.sim.now - t0
+        assert db.tree.compaction_debt() == 0
+    assert spans[0.3] > spans[1.0] * 1.2, spans
+
+
+# ---------------------------------------------------------------------
+# per-tenant debt attribution lineage
+# ---------------------------------------------------------------------
+def _write_tenants(db, plan):
+    """Interleave tagged writes per ``plan = {tenant: n_objs}``."""
+    tree, sim = db.tree, db.sim
+
+    def writer(tenant, lo, n):
+        for k in range(lo, lo + n):
+            yield from tree.put(k, tenant=tenant)
+
+    lo, procs = 0, []
+    for tenant, n in plan.items():
+        procs.append(sim.process(writer(tenant, lo, n)))
+        lo += n
+    for p in procs:
+        sim.run_until(p)
+
+
+def _assert_conserved(tree):
+    by = tree.debt_by_tenant()
+    assert sum(by.values()) == pytest.approx(float(tree.compaction_debt()))
+    assert all(v >= 0.0 for v in by.values()), by
+    return by
+
+
+def test_debt_attribution_conservation_and_ordering():
+    db = DB("B3", tiny_scenario(), store_values=True)
+    # 3:1 write volume between the tenants — no untagged load phase, so
+    # nearly all debt should attribute (the remainder bucket stays small)
+    _write_tenants(db, {"x": 4500, "y": 1500})
+    # mid-flight: flushes queued, compactions running — conservation must
+    # hold at any instant, not just at quiescence
+    _assert_conserved(db.tree)
+    db.flush_all()
+    by = _assert_conserved(db.tree)
+    if db.tree.compaction_debt() > 0:
+        assert by.get("x", 0.0) > by.get("y", 0.0), by
+    db.drain()
+    _assert_conserved(db.tree)          # drained: debt (and shares) -> 0
+
+
+def test_debt_attribution_survives_crash_recovery():
+    db = DB("B3", tiny_scenario(), store_values=True)
+
+    # interleave the tenants 3:1 within one stream so the live WAL tail
+    # (what the crash keeps) contains records from both
+    def writer():
+        for k in range(4000):
+            yield from db.tree.put(k, tenant="x" if k % 4 else "y")
+
+    db.sim.run_until(db.sim.process(writer()))
+    db.crash()
+    info = db.reopen()
+    assert info["replayed_records"] > 0
+    # WAL replay re-attributed the records into the rebuilt MemTables
+    tallies = {}
+    for mt in [db.tree.memtable] + list(db.tree.immutables):
+        for t, n in mt.tenant_objs.items():
+            tallies[t] = tallies.get(t, 0) + n
+    assert tallies.get("x", 0) > tallies.get("y", 0) > 0, tallies
+    db.flush_all()
+    by = _assert_conserved(db.tree)
+    if db.tree.compaction_debt() > 0:
+        assert by.get("x", 0.0) > by.get("y", 0.0), by
+    db.drain()
+    _assert_conserved(db.tree)
+
+
+def test_untagged_writes_fall_into_remainder_bucket():
+    db = DB("B3", tiny_scenario(), store_values=True)
+    run_load(db, n_keys=3000)           # load phase is untagged
+    db.flush_all()
+    by = _assert_conserved(db.tree)
+    if db.tree.compaction_debt() > 0:
+        # everything unattributed: the "" bucket carries all of it
+        assert set(by) == {""}, by
+
+
+# ---------------------------------------------------------------------
+# crash semantics of the control plane's volatile state
+# ---------------------------------------------------------------------
+def test_rate_overrides_cleared_on_reopen():
+    db = DB("B3", tiny_scenario(), store_values=True,
+            admission=AdmissionConfig(policy="feedback",
+                                      protected=frozenset(["prot"])))
+    _write_tenants(db, {"bulk": 200})
+    # simulate a converged controller mid-run
+    db.admission.rate_overrides["bulk"] = 3.0
+    db.crash()
+    db.reopen()
+    # the overrides are volatile controller memory: a restarted
+    # ControlPlane must re-derive its trajectory, not inherit throttles
+    assert db.admission.rate_overrides == {}
+    # and a restarted plane starts from neutral actuation
+    plane = ControlPlane(db.sim, db.admission, targets={"prot": 1.0},
+                         db=db)
+    plane._u = 0.2
+    plane._pi.integral = -5.0
+    plane.start()
+    assert plane._u == 1.0 and plane._pi.integral == 0.0
+    plane.stop()
+    db.drain()
