@@ -8,7 +8,8 @@ published control-plane rows, and it appends one entry to
     {"kind": "bench_trajectory",
      "entries": [{"git_sha": ..., "date": ...,
                   "sim_speed_geomean": ..., "read_path_speedup": ...,
-                  "control_p99_ratio": ...}, ...]}
+                  "control_p99_ratio": ...,
+                  "drift_worst_phase_ratio": ...}, ...]}
 
 * ``sim_speed_geomean`` — DES-kernel speedup vs the frozen seed kernel
   (geomean over scales), parsed from the ``sim_speed_geomean,,,X.XXx``
@@ -21,6 +22,12 @@ published control-plane rows, and it appends one entry to
   on B3, from ``results/storage/control.json`` (lower is better; null
   when the bench artifact is absent, e.g. on PR CI which does not run
   the 900 s control bench).
+* ``drift_worst_phase_ratio`` — non-stationary robustness: across the
+  published drift rows (``results/storage/drift.json``), the *worst*
+  per-phase ratio of the best baseline's in-window sojourn p99 to the
+  paper scheme's (HHZS) in the same (program, arrival, tenant, zones,
+  phase) window (>= 1 means HHZS holds the lowest tail in every phase;
+  null when the drift bench has not been published).
 
 **Trend gate:** the append *fails* (exit 1) when the new sim-speed
 geomean regresses more than ``--regression`` (default 20%) below the
@@ -80,6 +87,49 @@ def control_p99_ratio(path: Path, scheme: str = "B3") -> Optional[float]:
     return round(min(controllers) / p99["reject"], 4)
 
 
+def drift_worst_phase_ratio(path: Path,
+                            scheme: str = "HHZS") -> Optional[float]:
+    """Worst per-phase tail ratio of the best baseline vs ``scheme``.
+
+    Per-phase *throughput* is arrival-bound in the drift runs (every op
+    scores in the phase it arrived in and the run drains), so the
+    discriminating quantity is the in-window sojourn tail.  Groups the
+    published drift rows by (program, arrival, tenant, zones) and within
+    every phase window divides the best (lowest) competing scheme's
+    ``latency_p99`` by the paper scheme's.  The minimum over all windows
+    is the trend metric: >= 1 means HHZS holds the lowest tail in every
+    phase; below 1 quantifies its worst non-stationary window.  Returns
+    ``None`` when the artifact is absent or carries no comparable phase.
+    """
+    if not path.exists():
+        return None
+    rows = json.loads(path.read_text())
+    groups: Dict[tuple, List[Dict]] = {}
+    for r in rows:
+        if "drift" in r and isinstance(r.get("phases"), list):
+            key = (r["drift"], r.get("arrival"), r.get("tenant"),
+                   r.get("ssd_zones"))
+            groups.setdefault(key, []).append(r)
+    worst = None
+    for rs in groups.values():
+        per_phase: Dict[int, Dict[str, float]] = {}
+        for r in rs:
+            for p in r["phases"]:
+                if p.get("n_measured"):
+                    per_phase.setdefault(p["phase"], {})[r["scheme"]] = \
+                        p["latency_p99"]
+        for vals in per_phase.values():
+            if vals.get(scheme, 0) <= 0:
+                continue
+            rivals = [v for s, v in vals.items() if s != scheme and v > 0]
+            if not rivals:
+                continue
+            ratio = min(rivals) / vals[scheme]
+            if worst is None or ratio < worst:
+                worst = ratio
+    return None if worst is None else round(worst, 4)
+
+
 def append_entry(traj_path: Path, entry: Dict, *, window: int = 5,
                  regression: float = 0.2) -> int:
     """Append ``entry``, enforce the trend gate, rewrite the artifact.
@@ -137,6 +187,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--control", default="results/storage/control.json",
                     help="published bench_control rows (ratio is null "
                          "when absent)")
+    ap.add_argument("--drift", default="results/storage/drift.json",
+                    help="published bench_drift rows (ratio is null "
+                         "when absent)")
     ap.add_argument("--out", default="results/bench_trajectory.json")
     ap.add_argument("--sha", default=None,
                     help="commit sha to record (default: git rev-parse)")
@@ -157,6 +210,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         "read_path_speedup": parse_marker_csv(Path(args.read_csv),
                                               "read_path_speedup"),
         "control_p99_ratio": control_p99_ratio(Path(args.control)),
+        "drift_worst_phase_ratio": drift_worst_phase_ratio(
+            Path(args.drift)),
     }
     return append_entry(Path(args.out), entry, window=args.window,
                         regression=args.regression)

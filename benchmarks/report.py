@@ -132,6 +132,11 @@ def storage_tables() -> str:
     if sv:
         out.append("### LLM KV-cache serving (bench_serving)")
         out.append(sv)
+    dr = drift_table()
+    if dr:
+        out.append("### drift traces: per-phase scheme rankings "
+                   "(bench_drift)")
+        out.append(dr)
     tl = timeline_table()
     if tl:
         out.append("### telemetry timelines (results/storage/timelines)")
@@ -153,6 +158,7 @@ def _grid_rows():
             if "tenant" not in r and "fault" not in r
             and "filter_bits" not in r and "tiering" not in r
             and "shards" not in r and "shard" not in r
+            and "drift" not in r
             and r.get("workload") in set("ABCDEF")]
 
 
@@ -252,7 +258,7 @@ def scenario_matrix_table() -> str:
     for r in _scenario_rows():
         if "tenant" in r or "fault" in r or "filter_bits" in r \
                 or "tiering" in r or "shards" in r or "shard" in r \
-                or r.get("workload") in set("ABCDEF"):
+                or "drift" in r or r.get("workload") in set("ABCDEF"):
             continue
         found = True
         rows.append(
@@ -278,7 +284,7 @@ def tenant_tail_table() -> str:
             "|---|---|---|---|---|---|---|---|---|---|---|"]
     found = False
     for r in _scenario_rows():
-        if "tenant" not in r:
+        if "tenant" not in r or "drift" in r:
             continue
         found = True
         a = r["admission"]
@@ -517,6 +523,81 @@ def serving_table() -> str:
             f"| {int(r['promote_pages'])}/{int(r['demote_pages'])} "
             f"| {int(r['preempt_stalls'])} |")
     return "\n".join(out)
+
+
+def _drift_rows():
+    """Drift rows: prefer the dedicated ``bench_drift`` artifact, fall
+    back to the merged scenarios.json rows (``drift`` marks the kind
+    either way)."""
+    p = Path("results/storage/drift.json")
+    if p.exists():
+        return json.loads(p.read_text())
+    return [r for r in _scenario_rows() if "drift" in r]
+
+
+def drift_table() -> str:
+    """Per-phase pivot from ``bench_drift`` (rows carrying ``drift``):
+    one table per (program, tenant, budget) group, schemes x phases, each
+    entry the scheme's in-window sojourn p99 (the phase winner — lowest
+    tail — in bold; per-phase throughput is arrival-bound by
+    construction, so tails are what discriminate).  The headline
+    question is *ranking stability*:
+    a list of the windows where a baseline out-ranks HHZS leads the
+    section (or a note that HHZS holds every window — see
+    docs/ARCHITECTURE.md on why), and each group reports its
+    ``rank_flips`` count — how many phase boundaries reshuffled the
+    scheme ordering."""
+    from repro.workloads.drift import phase_rankings
+    rows = [r for r in _drift_rows() if "drift" in r and r.get("phases")]
+    if not rows:
+        return ""
+    rankings = phase_rankings(rows)
+    groups = {}
+    for r in rows:
+        key = (r["drift"], r.get("arrival"), r.get("tenant"),
+               r.get("ssd_zones"))
+        groups.setdefault(key, []).append(r)
+    out = []
+    losses = []
+    for key in sorted(groups, key=str):
+        drift_name, _arrival, tenant, zones = key
+        rs = groups[key]
+        rk = rankings.get(key, {"phases": [], "flips": 0})
+        winners = {p["phase"]: (p["ranking"][0] if p["ranking"] else None)
+                   for p in rk["phases"]}
+        for p in rk["phases"]:
+            if p["ranking"] and "HHZS" in p["ranking"] \
+                    and p["ranking"][0] != "HHZS":
+                losses.append(f"{drift_name}/{p['name']} "
+                              f"(tenant {tenant}): {p['ranking'][0]}")
+        pnames = [p["name"] for p in rs[0]["phases"]]
+        out.append(f"**{drift_name}** tenant={tenant}, ssd_zones={zones} "
+                   f"({rk['flips']} rank flips; entries: in-window "
+                   f"sojourn p99 (s), phase winner in bold; "
+                   f"drops/drain violations per scheme)")
+        out.append("| scheme | " + " | ".join(pnames)
+                   + " | dropped | drain viol |")
+        out.append("|---" * (len(pnames) + 3) + "|")
+        for r in sorted(rs, key=lambda r: _scheme_order(
+                [x["scheme"] for x in rs]).index(r["scheme"])):
+            vals = []
+            for p in r["phases"]:
+                v = f"{p['latency_p99']:.1f}"
+                if winners.get(p["phase"]) == r["scheme"]:
+                    v = f"**{v}**"
+                vals.append(v)
+            out.append(f"| {r['scheme']} | " + " | ".join(vals)
+                       + f" | {r.get('dropped', 0)} "
+                       f"| {r.get('drain_violations', 0)} |")
+        out.append("")
+    if losses:
+        head = ("Windows where a baseline out-ranks HHZS: "
+                + "; ".join(losses))
+    else:
+        head = ("HHZS leads every (program x phase) window — see "
+                "docs/ARCHITECTURE.md §Drift traces on why the ranking "
+                "is stable under these programs.")
+    return "\n".join([head, ""] + out).rstrip()
 
 
 # series worth summarizing in the report (timelines carry ~30 more);

@@ -9,11 +9,15 @@ everything else.  That invariant is easy to break silently (a bench that
 rewrites the file drops another sweep's rows; a driver bug duplicates a
 cell), so this linter is run in CI and by every producer *before* writing:
 
-* row-kind discrimination: a row carrying ``tenant`` is a multi-tenant
-  row (it may *also* carry fault columns — ``run_multi_tenant(faults=...)``
-  emits per-tenant availability), one carrying ``fault`` alone is a fault
-  row, else single-stream — and each kind must carry its required columns;
+* row-kind discrimination: a row carrying ``drift`` is a drift-trace row
+  (per-phase windows), one carrying ``tenant`` is a multi-tenant row (it
+  may *also* carry fault columns — ``run_multi_tenant(faults=...)`` emits
+  per-tenant availability), one carrying ``fault`` alone is a fault row,
+  else single-stream — and each kind must carry its required columns;
 * no duplicate ``(cell, tenant)`` keys — the symptom of a bad merge;
+* drift rows: a non-empty ``phases`` window list with per-phase
+  conservation (``sum(phase n_arrived) == n_arrived``, same for
+  completions/drops) and ``n_arrived == n_completed + dropped``;
 * value sanity: known scheme, finite non-negative rates/percentiles,
   percentile dicts with the canonical p50..p9999 keys, admission
   conservation (``arrived == admitted + rejected + holding``), SLO
@@ -86,19 +90,35 @@ SHARD_NUMERIC = ("kv_ops", "kv_completed", "ssd_read_bytes",
                  "ssd_write_bytes", "hdd_read_bytes", "hdd_write_bytes",
                  "compaction_debt", "shards", "ssd_zones")
 
+# drift rows (repro.workloads.drift.run_drift): per-tenant rows carrying
+# the program name and per-phase metric windows; no admission columns
+DRIFT_COLUMNS = ("drift", "tenant", "phases", "n_completed", "dropped",
+                 "drain_violations")
+# required keys of every per-phase window entry
+PHASE_KEYS = ("phase", "name", "t0", "t1", "workload", "n_arrived",
+              "n_completed", "n_dropped", "n_measured", "throughput",
+              "latency_p99", "queue_p99", "service_p99")
+PHASE_NUMERIC = ("phase", "t0", "t1", "n_arrived", "n_completed",
+                 "n_dropped", "n_measured", "throughput", "latency_p99",
+                 "queue_p99", "service_p99")
+
 
 def row_kind(row: Dict) -> str:
-    """Discriminate the five row kinds sharing scenarios.json.
+    """Discriminate the six row kinds sharing scenarios.json.
 
     Serving rows are checked first: a multi-tenant serving run carries
     per-tenant columns too, and must not be mistaken for a storage
-    tenant row (whose required columns it does not have).  A ``shard``
+    tenant row (whose required columns it does not have).  Drift rows
+    carry ``tenant`` too (the drift tenant) but none of the admission
+    columns, so they discriminate before the tenant kind.  A ``shard``
     column marks a per-shard sub-row (the sharded cell's aggregate row
     carries ``shards`` but never ``shard``)."""
     if "tiering" in row:
         return "serving"
     if "shard" in row:
         return "shard"
+    if "drift" in row:
+        return "drift"
     if "tenant" in row:
         return "tenant"
     if "fault" in row:
@@ -170,6 +190,76 @@ def _check_serving(errors: List[str], where: str, row: Dict) -> None:
                       f"finite number")
 
 
+def _check_drift(errors: List[str], where: str, row: Dict) -> None:
+    """Drift-row specifics: the per-phase window list and conservation.
+
+    Straddle rule: every op belongs to the phase it *arrived* in, so the
+    windows partition the run's ops — per tenant row,
+    ``sum(phase n_arrived) == n_arrived`` and every window closes with
+    ``n_arrived == n_completed + n_dropped`` (drain-to-completion runs)."""
+    for col in ("n_completed", "dropped", "drain_violations"):
+        v = row[col]
+        if not isinstance(v, int) or v < 0:
+            errors.append(f"{where}: {col}={v!r} not a non-negative "
+                          f"integer")
+    rf = row.get("rank_flips")
+    if rf is not None and (not isinstance(rf, int) or rf < 0):
+        errors.append(f"{where}: rank_flips={rf!r} not a non-negative "
+                      f"integer")
+    phases = row["phases"]
+    if not isinstance(phases, list) or not phases:
+        errors.append(f"{where}: phases must be a non-empty list")
+        return
+    sums = {"n_arrived": 0, "n_completed": 0, "n_dropped": 0}
+    ok = True
+    for j, ph in enumerate(phases):
+        pw = f"{where}.phases[{j}]"
+        if not isinstance(ph, dict):
+            errors.append(f"{pw}: phase entry is not an object")
+            ok = False
+            continue
+        missing = [k for k in PHASE_KEYS if k not in ph]
+        if missing:
+            errors.append(f"{pw}: missing keys {missing}")
+            ok = False
+            continue
+        for k in PHASE_NUMERIC:
+            v = ph[k]
+            if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                    or v < 0:
+                errors.append(f"{pw}: {k}={v!r} not a non-negative "
+                              f"finite number")
+                ok = False
+        if not ok:
+            continue
+        if ph["t1"] <= ph["t0"]:
+            errors.append(f"{pw}: empty window t0={ph['t0']} "
+                          f"t1={ph['t1']}")
+        if ph["n_arrived"] != ph["n_completed"] + ph["n_dropped"]:
+            errors.append(
+                f"{pw}: window conservation violated: n_arrived="
+                f"{ph['n_arrived']} != n_completed+n_dropped="
+                f"{ph['n_completed'] + ph['n_dropped']}")
+        for k in sums:
+            sums[k] += ph[k]
+    if not ok:
+        return
+    checks = (("n_arrived", row["n_arrived"]),
+              ("n_completed", row["n_completed"]),
+              ("n_dropped", row["dropped"]))
+    for k, total in checks:
+        if sums[k] != total:
+            errors.append(
+                f"{where}: per-phase conservation violated: "
+                f"sum(phase {k})={sums[k]} != row total {total} — an op "
+                f"straddling a boundary was double-counted or lost")
+    if row["n_arrived"] != row["n_completed"] + row["dropped"]:
+        errors.append(
+            f"{where}: drift conservation violated: n_arrived="
+            f"{row['n_arrived']} != n_completed+dropped="
+            f"{row['n_completed'] + row['dropped']}")
+
+
 def validate_rows(rows, path: str = "<rows>",
                   strict: bool = False) -> List[str]:
     """Validate a scenario-row list; returns human-readable violations.
@@ -234,7 +324,8 @@ def validate_rows(rows, path: str = "<rows>",
             continue
         required = BASE_COLUMNS + (
             TENANT_COLUMNS if kind == "tenant"
-            else FAULT_COLUMNS if kind == "fault" else ())
+            else FAULT_COLUMNS if kind == "fault"
+            else DRIFT_COLUMNS if kind == "drift" else ())
         missing = [c for c in required if c not in row]
         if missing:
             errors.append(f"{where}: missing columns {missing}")
@@ -268,6 +359,8 @@ def validate_rows(rows, path: str = "<rows>",
         if not isinstance(row["op_counts"], dict) \
                 or not isinstance(row["extras"], dict):
             errors.append(f"{where}: op_counts/extras must be objects")
+        if kind == "drift":
+            _check_drift(errors, where, row)
         if kind == "tenant":
             a = row["admission"]
             if not isinstance(a, dict):
@@ -357,7 +450,9 @@ def validate_timeline(obj, path: str = "<timeline>",
     """Lint one timeline artifact (``repro.obs.MetricsRegistry.timeline``).
 
     Schema: ``{"kind": "timeline", "meta": {}, "sample_period": s > 0,
-    "t": [ascending samples], "series": {name: [num|null] * len(t)}}``.
+    "t": [ascending samples], "series": {name: [num|null] * len(t)}}``,
+    plus an optional ``"marks"`` list (``[{t, label}]``, ascending ``t``)
+    — the drift runner's phase-boundary markers.
     """
     errors: List[str] = []
     if not isinstance(obj, dict) or obj.get("kind") != "timeline":
@@ -397,6 +492,24 @@ def validate_timeline(obj, path: str = "<timeline>",
                 if bad:
                     errors.append(f"{path}: series {name!r} has non-finite "
                                   f"entries {bad[:3]}")
+        marks = obj.get("marks")
+        if marks is not None:
+            if not isinstance(marks, list):
+                errors.append(f"{path}: marks must be a list")
+            else:
+                ts = []
+                for j, mk in enumerate(marks):
+                    if not isinstance(mk, dict) \
+                            or not isinstance(mk.get("t"), (int, float)) \
+                            or not math.isfinite(mk["t"]) or mk["t"] < 0 \
+                            or not isinstance(mk.get("label"), str) \
+                            or not mk["label"]:
+                        errors.append(f"{path}: marks[{j}] must be "
+                                      f"{{t: number >= 0, label: str}}")
+                        continue
+                    ts.append(mk["t"])
+                if any(b < a for a, b in zip(ts, ts[1:])):
+                    errors.append(f"{path}: marks must be t-ascending")
     if strict and errors:
         raise ValueError(f"{len(errors)} timeline violations:\n"
                          + "\n".join(errors))
@@ -404,7 +517,8 @@ def validate_timeline(obj, path: str = "<timeline>",
 
 
 TRAJECTORY_FIELDS = ("git_sha", "date", "sim_speed_geomean",
-                     "read_path_speedup", "control_p99_ratio")
+                     "read_path_speedup", "control_p99_ratio",
+                     "drift_worst_phase_ratio")
 
 
 def validate_trajectory(obj, path: str = "<trajectory>",
@@ -412,10 +526,11 @@ def validate_trajectory(obj, path: str = "<trajectory>",
     """Lint the CI bench-trend artifact (``results/bench_trajectory.json``).
 
     Schema: ``{"kind": "bench_trajectory", "entries": [{git_sha, date,
-    sim_speed_geomean, read_path_speedup, control_p99_ratio}]}`` —
-    one entry per CI run, appended by ``benchmarks/bench_trend.py``; the
-    speed fields are positive finite numbers, ``control_p99_ratio`` may
-    be null when no control rows were available to the run.
+    sim_speed_geomean, read_path_speedup, control_p99_ratio,
+    drift_worst_phase_ratio}]}`` — one entry per CI run, appended by
+    ``benchmarks/bench_trend.py``; the speed fields are positive finite
+    numbers, ``control_p99_ratio`` / ``drift_worst_phase_ratio`` may be
+    null when no control/drift rows were available to the run.
     """
     errors: List[str] = []
     if not isinstance(obj, dict) or obj.get("kind") != "bench_trajectory":
@@ -443,11 +558,12 @@ def validate_trajectory(obj, path: str = "<trajectory>",
                         or v <= 0:
                     errors.append(f"{where}: {k}={v!r} not a positive "
                                   f"finite number")
-            v = e["control_p99_ratio"]
-            if v is not None and (not isinstance(v, (int, float))
-                                  or not math.isfinite(v) or v <= 0):
-                errors.append(f"{where}: control_p99_ratio={v!r} not a "
-                              f"positive finite number or null")
+            for k in ("control_p99_ratio", "drift_worst_phase_ratio"):
+                v = e[k]
+                if v is not None and (not isinstance(v, (int, float))
+                                      or not math.isfinite(v) or v <= 0):
+                    errors.append(f"{where}: {k}={v!r} not a "
+                                  f"positive finite number or null")
     if strict and errors:
         raise ValueError(f"{len(errors)} trajectory violations:\n"
                          + "\n".join(errors))
@@ -470,7 +586,7 @@ def validate_file(path: Path) -> List[str]:
 
 DEFAULT_TARGETS = ("scenarios.json", "multitenant.json", "faults.json",
                    "control.json", "filters.json", "serving.json",
-                   "sharding.json")
+                   "sharding.json", "drift.json")
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:

@@ -122,6 +122,9 @@ class MetricsRegistry:
         self.samples = 0
         self._gen = 0               # sampler generation (restart() bumps it)
         self._running = False
+        # point-in-time annotations (e.g. drift phase boundaries): pure
+        # list appends off the sampling path, never a DES event
+        self._marks: List[Tuple[float, str]] = []
 
     # -- registration ---------------------------------------------------
     def counter(self, name: str) -> Counter:
@@ -276,6 +279,18 @@ class MetricsRegistry:
     def names(self) -> List[str]:
         return sorted(self._series)
 
+    # -- marks ----------------------------------------------------------
+    def mark(self, label: str, t: Optional[float] = None) -> None:
+        """Record a point-in-time annotation (``t`` defaults to
+        ``sim.now``) — e.g. a drift-trace phase boundary.  Marks are not
+        a series: they land in the timeline artifact's ``marks`` list so
+        plots can segment the run without resampling anything."""
+        self._marks.append((float(self.sim.now if t is None else t),
+                            str(label)))
+
+    def marks(self) -> List[Tuple[float, str]]:
+        return list(self._marks)
+
     # -- timeline artifact ----------------------------------------------
     @staticmethod
     def _clean(v: Optional[float]) -> Optional[float]:
@@ -284,8 +299,11 @@ class MetricsRegistry:
         return v
 
     def timeline(self, meta: Optional[Dict[str, Any]] = None) -> Dict:
-        """JSON-ready timeline artifact (see the module docstring schema)."""
-        return {
+        """JSON-ready timeline artifact (see the module docstring schema).
+        When any :meth:`mark` was recorded the artifact additionally
+        carries ``"marks": [{"t": ..., "label": ...}, ...]`` (ascending
+        ``t``) — phase-boundary annotations for segmented plots."""
+        out = {
             "kind": TIMELINE_KIND,
             "meta": dict(meta or {}),
             "sample_period": self.sample_period,
@@ -293,6 +311,10 @@ class MetricsRegistry:
             "series": {name: [self._clean(v) for v in self.series(name)]
                        for name in self.names()},
         }
+        if self._marks:
+            out["marks"] = [{"t": t, "label": lbl}
+                            for t, lbl in sorted(self._marks)]
+        return out
 
     def dump_timeline(self, path: Union[str, Path],
                       meta: Optional[Dict[str, Any]] = None) -> Path:

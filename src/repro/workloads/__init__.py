@@ -10,6 +10,9 @@ from .runner import (ArrivalProcess, PoissonArrivals, BurstyArrivals,
 from .serving import (ServingWorkload, ServingPool, ServingCosts,
                       ServingCell, ServingResult, run_serving,
                       serving_arrivals, build_serving_grid)
+from .drift import (Phase, DriftTenant, TraceProgram, DriftCell,
+                    run_drift, build_program, PROGRAM_BUILDERS,
+                    inject_scan_burst, phase_rankings, rank_flips)
 # NOTE: the sweep driver (repro.workloads.sweep) is imported explicitly,
 # not re-exported here — it doubles as `python -m repro.workloads.sweep`
 # and importing it at package load would shadow that entry point.
@@ -30,4 +33,7 @@ __all__ = [
     "ServingWorkload", "ServingPool", "ServingCosts", "ServingCell",
     "ServingResult", "run_serving", "serving_arrivals",
     "build_serving_grid",
+    "Phase", "DriftTenant", "TraceProgram", "DriftCell", "run_drift",
+    "build_program", "PROGRAM_BUILDERS", "inject_scan_burst",
+    "phase_rankings", "rank_flips",
 ]

@@ -317,6 +317,37 @@ class OpenLoopResult:
                         the spec sets ``FaultSpec.recovery_slo_s``:
                         the downtime budget and whether the measured
                         downtime stayed within it.
+
+    Drift rows (``repro.workloads.drift.run_drift``) carry instead of the
+    multi-tenant block (``tenant`` names the drift tenant; no admission
+    columns):
+
+    ``drift``           the ``TraceProgram`` name, e.g. ``"rotate~poisson"``.
+    ``phases``          per-phase metric windows, one dict per phase the
+                        tenant was live in: ``phase`` (index), ``name``,
+                        ``t0``/``t1`` (window, virtual s relative to run
+                        start), ``workload``, ``n_arrived``,
+                        ``n_completed``, ``n_dropped``, ``n_measured``,
+                        ``throughput`` (completions / window length) and
+                        ``latency_p99``/``queue_p99``/``service_p99``.
+                        Ops are assigned to the phase they *arrived* in,
+                        so a boundary straddler counts in exactly one
+                        window and ``sum(phase n_arrived) == n_arrived``.
+    ``n_completed``     completed ops over the whole program
+                        (``n_arrived == n_completed + dropped``).
+    ``dropped``         departed-tenant ops cancelled while still queued
+                        at their departure boundary.
+    ``drain_violations``
+                        departed-tenant ops completing after the
+                        ``boundary + TraceProgram.drain_s`` deadline
+                        (kept at 0 by the engine's drop-at-boundary
+                        semantics unless a single op's service time
+                        exceeds the grace window).
+    ``rank_flips``      run-level summary attached by ``bench_drift``
+                        (absent on raw sweep rows): how many phase
+                        boundaries changed the cross-scheme throughput
+                        ordering of this row's (program x arrival x
+                        tenant x budget) group.
     """
 
     name: str                      # workload name
@@ -355,10 +386,19 @@ class OpenLoopResult:
     crash: Optional[Dict[str, float]] = None
     recovery_slo_s: Optional[float] = None
     recovery_slo_met: Optional[bool] = None
+    # set only on drift rows (repro.workloads.drift.run_drift)
+    drift: Optional[str] = None
+    phases: Optional[List[Dict]] = None
+    n_completed: Optional[int] = None
+    dropped: Optional[int] = None
+    drain_violations: Optional[int] = None
+    rank_flips: Optional[int] = None
 
     def row(self) -> str:
         tag = ""
-        if self.tenant is not None:
+        if self.drift is not None:
+            tag = f"[{self.tenant}@{self.drift}] "
+        elif self.tenant is not None:
             star = "*" if self.protected else ""
             tag = f"[{self.tenant}{star}/{self.policy}] "
         shed = ""
@@ -389,7 +429,14 @@ class OpenLoopResult:
             "max_queue_depth": self.max_queue_depth,
             "op_counts": self.op_counts, "extras": self.extras,
         }
-        if self.tenant is not None:
+        if self.drift is not None:
+            d.update(tenant=self.tenant, drift=self.drift,
+                     phases=self.phases, n_completed=self.n_completed,
+                     dropped=self.dropped,
+                     drain_violations=self.drain_violations)
+            if self.rank_flips is not None:
+                d["rank_flips"] = self.rank_flips
+        elif self.tenant is not None:
             d.update(tenant=self.tenant, policy=self.policy,
                      protected=self.protected, admission=self.admission,
                      goodput=self.goodput)
@@ -1138,6 +1185,11 @@ class ScenarioMatrix:
     serving_pools: Sequence[object] = ()          # ServingPool
     serving_admission: Union[str, AdmissionConfig, None] = None
     serving_costs: Optional[object] = None        # ServingCosts
+    # drift scenario family (repro.workloads.drift): each TraceProgram
+    # adds one DriftCell per scheme x SSD budget; the cell runs the
+    # program's own virtual-time schedule (``duration`` is ignored) and
+    # emits one per-tenant row with ``drift``/``phases`` columns
+    drift_programs: Sequence[object] = ()         # TraceProgram
     results: List[OpenLoopResult] = field(default_factory=list)
 
     def _workload_spec(self, w) -> WorkloadSpec:
@@ -1163,6 +1215,15 @@ class ScenarioMatrix:
                 for a in self.arrivals
                 for sp in pools]
 
+    def _drift_cells(self) -> List:
+        if not self.drift_programs:
+            return []
+        from .drift import DriftCell
+        return [DriftCell(s, p, z)
+                for s in self.schemes
+                for p in self.drift_programs
+                for z in self.ssd_zone_budgets]
+
     def cells(self) -> List[Union[ScenarioCell, MultiTenantCell]]:
         if self.tenants:
             return [MultiTenantCell(s, tuple(mix), pol, z, f)
@@ -1170,7 +1231,8 @@ class ScenarioMatrix:
                     for mix in self.tenants
                     for pol in self.policies
                     for z in self.ssd_zone_budgets
-                    for f in self.faults] + self._serving_cells()
+                    for f in self.faults] \
+                + self._serving_cells() + self._drift_cells()
         return [ScenarioCell(s, w, a, z, f, fb, nsh, self.routing, rb)
                 for s in self.schemes
                 for w in map(self._workload_spec, self.workloads)
@@ -1180,7 +1242,7 @@ class ScenarioMatrix:
                 for fb in self.filter_bits
                 for nsh in self.shards
                 for rb in (self.rebalance if nsh > 1 else (False,))
-                ] + self._serving_cells()
+                ] + self._serving_cells() + self._drift_cells()
 
     def _fresh_db(self, scheme: str, ssd_zones: int,
                   filter_bits: Optional[int] = None, shards: int = 1,
@@ -1226,6 +1288,7 @@ class ScenarioMatrix:
         Returns the per-(sub)run results plus their JSON rows (one per
         tenant for multi-tenant cells, else exactly one).
         """
+        from .drift import DriftCell, run_drift
         from .serving import ServingCell, run_matrix_cell
         if isinstance(cell, ServingCell):
             return run_matrix_cell(self, cell)
@@ -1253,6 +1316,10 @@ class ScenarioMatrix:
                 max_concurrency=self.max_concurrency,
                 seed=self.seed, policy=cell.policy, faults=cell.fault)
             per_cell = res.tenants
+        elif isinstance(cell, DriftCell):
+            per_cell = run_drift(
+                db, cell.program, n_keys=n_keys, warmup=self.warmup,
+                max_concurrency=self.max_concurrency, seed=self.seed)
         else:
             per_cell = [run_open_loop(
                 db, cell.workload, cell.arrival, self.duration,
@@ -1263,10 +1330,18 @@ class ScenarioMatrix:
             reg.sample_now()        # close the series at end-of-run state
             if self.timeline_dir is not None:
                 from ..obs.metrics import timeline_path
+                meta = {"cell": cell.name, "scheme": cell.scheme,
+                        "ssd_zones": cell.ssd_zones}
+                if isinstance(cell, DriftCell):
+                    # phase windows (relative virtual s) so timeline
+                    # plots can segment by phase alongside the marks
+                    meta["drift"] = cell.program.name
+                    meta["phases"] = [
+                        {"name": p.name, "t0": b[0], "t1": b[1]}
+                        for p, b in zip(cell.program.phases,
+                                        cell.program.bounds())]
                 reg.dump_timeline(
-                    timeline_path(self.timeline_dir, cell.name),
-                    meta={"cell": cell.name, "scheme": cell.scheme,
-                          "ssd_zones": cell.ssd_zones})
+                    timeline_path(self.timeline_dir, cell.name), meta=meta)
         rows = []
         for r in per_cell:
             row = r.to_json()

@@ -49,7 +49,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from .runner import (BurstyArrivals, PoissonArrivals, RampArrivals,
                      ScenarioMatrix)
-from .ycsb import YCSB, run_load, run_workload
+from .ycsb import YCSB, WorkloadSpec, run_load, run_workload
 
 
 @dataclass(frozen=True)
@@ -394,6 +394,44 @@ def build_control_grid(schemes: Sequence[str], *, duration: float,
         telemetry=timelines is not None, timeline_dir=timelines)
 
 
+def build_drift_grid(schemes: Sequence[str], programs: Sequence[str],
+                     arrival_kinds: Sequence[str], *, phase_s: float,
+                     warmup: float, key_div: int, seed: int = 1,
+                     verbose: bool = False,
+                     timelines: Optional[str] = None,
+                     budgets: Sequence[int] = (20,)) -> ScenarioMatrix:
+    """The drift scenario grid (CLI ``--drift``): named
+    ``TraceProgram``\\ s (``repro.workloads.drift``) x schemes x arrival
+    kinds x SSD budgets.  Offered rates are anchored to one seeded
+    closed-loop probe of the weakest baseline (B3) on a 50/50 mix, as in
+    ``build_control_grid`` — deterministic, so resumed sweeps regenerate
+    identical programs and cell names.  Each cell runs the program's own
+    virtual-time schedule and emits per-tenant rows with
+    ``drift``/``phases`` columns; with ``timelines`` the telemetry bus
+    additionally records phase-boundary marks (pull-only: rows are
+    byte-identical either way, asserted by the CI grid-smoke drift leg).
+    """
+    from .drift import build_program
+
+    factory = GridDBFactory(key_div=key_div)
+    probe = factory("B3", min(budgets))
+    spec = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
+    pr = run_workload(probe, spec, n_ops=2000, n_keys=probe.n_keys,
+                      seed=seed)
+    svc = max(pr.throughput, 1e-6)
+    if verbose:
+        print(f"[sweep] drift probe: service ~{svc:.1f} ops/s", flush=True)
+    progs = [build_program(name, svc=round(svc, 4), n_keys=probe.n_keys,
+                           arrival_kind=kind, phase_s=phase_s)
+             for name in programs for kind in arrival_kinds]
+    return ScenarioMatrix(
+        schemes=list(schemes), workloads=[], arrivals=[],
+        ssd_zone_budgets=list(budgets), warmup=warmup,
+        key_div=key_div, seed=seed, db_factory=factory,
+        telemetry=timelines is not None, timeline_dir=timelines,
+        drift_programs=progs)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     from repro.lsm.db import SCHEMES
     ap = argparse.ArgumentParser(
@@ -442,10 +480,28 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "(prot+bulk tenants, full-knob PI feedback "
                          "policy) instead of the YCSB grid; honours "
                          "--schemes/--duration/--warmup/--key-div")
+    ap.add_argument("--drift", default=None, metavar="PROGRAMS",
+                    help="run the drift grid instead of the YCSB grid: "
+                         "comma-separated TraceProgram names "
+                         "(repro.workloads.drift, e.g. 'rotate,churn'); "
+                         "honours --schemes/--arrivals (poisson, bursty)/"
+                         "--budgets/--warmup/--key-div/--phase-s")
+    ap.add_argument("--phase-s", type=float, default=150.0,
+                    help="virtual seconds per drift-program phase")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    if args.control:
+    if args.drift:
+        matrix = build_drift_grid(
+            [s for s in args.schemes.split(",") if s],
+            [p for p in args.drift.split(",") if p],
+            [a for a in args.arrivals.split(",") if a
+             and a in ("poisson", "bursty")] or ["poisson"],
+            phase_s=args.phase_s, warmup=args.warmup,
+            key_div=args.key_div, seed=args.seed,
+            verbose=not args.quiet, timelines=args.timelines,
+            budgets=[int(b) for b in args.budgets.split(",") if b])
+    elif args.control:
         matrix = build_control_grid(
             [s for s in args.schemes.split(",") if s],
             duration=args.duration, warmup=args.warmup,

@@ -12,7 +12,7 @@ and records per-operation latency in virtual time.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
@@ -35,12 +35,20 @@ class WorkloadSpec:
     scan_max: int = 100
     # "hotspot" distribution: zipf-popular ranks map to a *contiguous*
     # key range (no scramble) whose base drifts by ``hotspot_step`` keys
-    # every ``hotspot_period`` ops — a moving hot spot in keyspace, the
-    # adversarial load for range sharding (the hot range concentrates on
-    # one shard, then walks off it).  ``hotspot_step=0`` means
-    # n_keys // 8, resolved when the stream is built.
+    # on a schedule — a moving hot spot in keyspace, the adversarial load
+    # for range sharding (the hot range concentrates on one shard, then
+    # walks off it).  ``hotspot_step`` semantics:
+    #   "auto" -> n_keys // 8, resolved when the stream is built
+    #   0      -> stationary hotspot (no drift)
+    #   k > 0  -> walk by k keys per period
+    # The walk schedule is ``hotspot_period_s`` *virtual seconds* when
+    # set (schemes at different service rates see the same hot range at
+    # the same virtual time — the drift-trace mode), else every
+    # ``hotspot_period`` *ops* (legacy op-index mode, kept for backward
+    # compat: it advances at the stream's own service rate).
     hotspot_period: int = 2000
-    hotspot_step: int = 0
+    hotspot_step: Union[int, str] = "auto"
+    hotspot_period_s: Optional[float] = None
 
     def mix(self):
         return np.array([self.read, self.update, self.insert,
@@ -136,10 +144,20 @@ class OpStream:
             .permutation(n_keys).astype(np.int64)
         self.load_order = getattr(db, "load_order",
                                   np.arange(n_keys, dtype=np.int64))
-        self.frontier = n_keys            # total inserted keys (D/E inserts)
+        # the insert frontier starts at the number of keys actually
+        # loaded, not at n_keys: a stream may declare a keyspace larger
+        # than the loaded prefix (drift "grow" phases) and the gap is
+        # filled by frontier-advancing inserts, never by load_order
+        self._loaded = min(n_keys, len(self.load_order))
+        self.frontier = self._loaded      # total inserted keys (D/E inserts)
         self.db = db
         self.counts = {name: 0 for name in OP_NAMES.values()}
-        self._hot_step = spec.hotspot_step or max(1, n_keys // 8)
+        step = spec.hotspot_step
+        self._hot_step = max(1, n_keys // 8) if step == "auto" else int(step)
+        # virtual-time origin for the hotspot_period_s walk: drift is
+        # measured from stream creation, not absolute sim time (load
+        # phases of different lengths must not offset the schedule)
+        self._t0 = float(db.sim.now)
         # originating tenant for write attribution (set by the
         # multi-tenant runner): rides every put() into the tree, tagging
         # flushed bytes for per-tenant compaction-debt attribution
@@ -158,13 +176,18 @@ class OpStream:
             off = self.frontier - 1 - rank
             if off < 0:
                 off = 0
-            return int(self.load_order[off]) if off < self.n_keys else off
+            return int(self.load_order[off]) if off < self._loaded else off
         if self.spec.dist == "hotspot":
             # contiguous drifting hot range: popular ranks land next to
             # each other in keyspace (deliberately unscrambled) and the
-            # base walks every hotspot_period ops
-            phase = i // max(1, self.spec.hotspot_period)
-            return int((rank + phase * self._hot_step) % self.n_keys)
+            # base walks every hotspot_period_s virtual seconds (or, in
+            # the legacy mode, every hotspot_period ops)
+            if self.spec.hotspot_period_s:
+                epoch = int((self.db.sim.now - self._t0)
+                            // self.spec.hotspot_period_s)
+            else:
+                epoch = i // max(1, self.spec.hotspot_period)
+            return int((rank + epoch * self._hot_step) % self.n_keys)
         return int(self.scramble[rank % self.n_keys])
 
     def is_point_read(self, i: int) -> bool:

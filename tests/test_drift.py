@@ -1,0 +1,307 @@
+"""Phase-programmed drift traces (repro.workloads.drift).
+
+Covers the subsystem's contracts:
+
+* virtual-time hotspot drift — schemes at different service rates see
+  the same hot range at the same virtual time (`hotspot_period_s`), the
+  explicit `hotspot_step=0` stationary mode and the `"auto"` sentinel;
+* straddle accounting — every op is counted in exactly one phase window
+  (the phase it arrived in), so per-phase counts conserve exactly, on
+  every scheme;
+* tenant departure — a departed tenant's queued ops are dropped at the
+  boundary and nothing completes past the drain deadline;
+* determinism — identical rows with telemetry on vs off, and across
+  repeated runs (the property the CI grid-smoke drift leg checks
+  end-to-end across sweep worker counts);
+* `phase_rankings` / `rank_flips` on synthetic rows.
+"""
+import json
+
+import pytest
+
+from conftest import tiny_scenario
+from repro.lsm import DB
+from repro.lsm.db import SCHEMES
+from repro.workloads import (READ, DriftTenant, OpStream, Phase,
+                             PoissonArrivals, ScenarioMatrix, TraceProgram,
+                             WorkloadSpec, build_program, phase_rankings,
+                             rank_flips, run_drift, run_load)
+
+MIX = WorkloadSpec("mix", read=0.5, update=0.5, alpha=0.9)
+READMIX = WorkloadSpec("readmix", read=0.9, update=0.1, alpha=0.99)
+
+
+def _loaded(scheme="HHZS", n=1000):
+    db = DB(scheme, tiny_scenario(), store_values=True)
+    run_load(db, n_keys=n)
+    db.flush_all()
+    return db, n
+
+
+def _advance(db, dt):
+    def waiter():
+        yield dt
+    db.sim.run_until(db.sim.process(waiter()))
+
+
+# ---------------------------------------------------------------------
+# virtual-time hotspot drift (ycsb satellite)
+# ---------------------------------------------------------------------
+def test_hotspot_virtual_time_same_range_across_schemes():
+    """Two schemes (different service rates) must see the same hot range
+    at the same *virtual time* — the walk no longer advances with the
+    stream's own op index."""
+    spec = WorkloadSpec("hot", read=1.0, dist="hotspot",
+                        hotspot_period_s=10.0, hotspot_step=50)
+    streams = []
+    for scheme in ("B1", "HHZS"):
+        db = DB(scheme, tiny_scenario(), store_values=True)
+        st = OpStream(db, spec, n_ops=100, n_keys=1000)
+        _advance(db, 25.0)            # both at virtual t=25 -> epoch 2
+        streams.append(st)
+    a, b = streams
+    # same virtual time => same hot range, regardless of op index
+    assert [a.resolve(READ, r, i=7) for r in range(16)] \
+        == [b.resolve(READ, r, i=9731) for r in range(16)] \
+        == [(r + 2 * 50) % 1000 for r in range(16)]
+
+
+def test_hotspot_virtual_time_walks_with_the_clock():
+    spec = WorkloadSpec("hot", read=1.0, dist="hotspot",
+                        hotspot_period_s=5.0, hotspot_step=100)
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    st = OpStream(db, spec, n_ops=10, n_keys=1000)
+    assert st.resolve(READ, 0, i=0) == 0
+    _advance(db, 12.0)                # epoch 2 at the same op index
+    assert st.resolve(READ, 0, i=0) == 200
+
+
+def test_hotspot_virtual_time_origin_is_stream_creation():
+    """Drift is measured from stream creation, not absolute sim time —
+    a long load phase must not offset the walk schedule."""
+    spec = WorkloadSpec("hot", read=1.0, dist="hotspot",
+                        hotspot_period_s=5.0, hotspot_step=100)
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    _advance(db, 123.0)               # pre-existing virtual time
+    st = OpStream(db, spec, n_ops=10, n_keys=1000)
+    assert st.resolve(READ, 0, i=0) == 0
+
+
+def test_latest_dist_with_keyspace_growth_override():
+    """A stream may declare a keyspace larger than the loaded prefix (the
+    drift "grow" phase): the insert frontier must start at the loaded
+    count and "latest" reads must never index past load_order."""
+    db, n = _loaded("B3", n=400)
+    spec = WorkloadSpec("grow", read=0.6, insert=0.4, dist="latest",
+                        alpha=0.9)
+    st = OpStream(db, spec, n_ops=50, n_keys=int(1.5 * n))
+    assert st.frontier == n
+    # in-range offsets map through load_order; deep ranks clamp to 0
+    assert st.resolve(READ, 0) == int(db.load_order[n - 1])
+    assert st.resolve(READ, 10 * n) == int(db.load_order[0])
+    # inserts advance the frontier past the loaded prefix; reads of the
+    # freshly inserted keys resolve to their raw ids, not via load_order
+    st.frontier = n + 25
+    assert st.resolve(READ, 0) == n + 24
+
+
+def test_hotspot_step_zero_is_stationary():
+    spec = WorkloadSpec("hot", read=1.0, dist="hotspot",
+                        hotspot_period=10, hotspot_step=0)
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    st = OpStream(db, spec, n_ops=100, n_keys=1000)
+    # _hot_step floors at 1 but a 0-key walk means epoch never moves the
+    # range in op-index mode only when step=0 -> stationary
+    assert [st.resolve(READ, 3, i=i) for i in (0, 55, 999)] == [3, 3, 3]
+
+
+def test_hotspot_auto_sentinel_derives_step():
+    spec = WorkloadSpec("hot", read=1.0, dist="hotspot",
+                        hotspot_period=50, hotspot_step="auto")
+    db = DB("HHZS", tiny_scenario(), store_values=True)
+    st = OpStream(db, spec, n_ops=100, n_keys=800)
+    assert st._hot_step == 800 // 8
+    assert st.resolve(READ, 0, i=50) == 100
+
+
+# ---------------------------------------------------------------------
+# straddle accounting + conservation
+# ---------------------------------------------------------------------
+def _two_phase(rate=30.0, phase_s=20.0):
+    return TraceProgram(
+        "p2", (Phase("a", phase_s, MIX), Phase("b", phase_s, READMIX)),
+        (DriftTenant("t0", PoissonArrivals(rate)),))
+
+
+def test_straddlers_counted_in_exactly_one_window():
+    """Overload a 1-server pool so a backlog straddles the boundary:
+    per-phase counts must still conserve exactly (an op double-counted
+    or lost at the boundary breaks the sums)."""
+    db, n = _loaded("B3")
+    rows = run_drift(db, _two_phase(rate=60.0), n_keys=n,
+                     max_concurrency=1)
+    assert len(rows) == 1
+    r = rows[0]
+    ph = r.phases
+    assert len(ph) == 2
+    assert sum(p["n_arrived"] for p in ph) == r.n_arrived
+    assert sum(p["n_completed"] for p in ph) == r.n_completed
+    assert sum(p["n_dropped"] for p in ph) == r.dropped == 0
+    assert r.n_arrived == r.n_completed
+    # genuinely overloaded: the backlog crossed the boundary
+    assert r.max_queue_depth > 5
+    for p in ph:
+        assert p["n_arrived"] == p["n_completed"] + p["n_dropped"]
+
+
+@pytest.mark.parametrize("scheme", list(SCHEMES))
+def test_per_phase_conservation_all_schemes(scheme):
+    db, n = _loaded(scheme, n=600)
+    prog = TraceProgram(
+        "mini", (Phase("a", 10.0, MIX), Phase("b", 10.0, READMIX)),
+        (DriftTenant("t0", PoissonArrivals(20.0)),
+         DriftTenant("t1", PoissonArrivals(10.0))))
+    rows = run_drift(db, prog, n_keys=n)
+    assert {r.tenant for r in rows} == {"t0", "t1"}
+    for r in rows:
+        assert sum(p["n_arrived"] for p in r.phases) == r.n_arrived
+        assert sum(p["n_completed"] for p in r.phases) == r.n_completed
+        assert r.n_arrived == r.n_completed + r.dropped
+        assert r.drift == "mini"
+
+
+# ---------------------------------------------------------------------
+# tenant departure
+# ---------------------------------------------------------------------
+def test_departed_tenant_drains_and_queued_ops_drop():
+    db, n = _loaded("B3")
+    prog = TraceProgram(
+        "churn-mini",
+        (Phase("both", 20.0, MIX, tenants=("base", "batch")),
+         Phase("solo", 20.0, READMIX, tenants=("base",))),
+        (DriftTenant("base", PoissonArrivals(10.0)),
+         # heavy enough that batch has queued ops at the boundary
+         DriftTenant("batch", PoissonArrivals(80.0))),
+        drain_s=30.0)
+    rows = {r.tenant: r for r in run_drift(db, prog, n_keys=n,
+                                           max_concurrency=2)}
+    batch, base = rows["batch"], rows["base"]
+    # batch only lives in phase 0; its queued ops dropped at the boundary
+    assert [p["phase"] for p in batch.phases] == [0]
+    assert batch.dropped > 0
+    assert batch.n_arrived == batch.n_completed + batch.dropped
+    # nothing from the departed tenant completed past the drain deadline
+    assert batch.drain_violations == 0
+    # the surviving tenant is untouched by the reaper
+    assert base.dropped == 0
+    assert base.n_arrived == base.n_completed
+
+
+# ---------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------
+def _matrix_rows(telemetry):
+    def db_factory(scheme, ssd_zones):
+        db = DB(scheme, tiny_scenario(ssd_zones=ssd_zones),
+                store_values=True)
+        run_load(db, n_keys=600)
+        db.flush_all()
+        db.n_keys = 600
+        return db
+
+    prog = TraceProgram(
+        "det", (Phase("a", 15.0, MIX), Phase("b", 15.0, READMIX)),
+        (DriftTenant("t0", PoissonArrivals(15.0)),))
+    matrix = ScenarioMatrix(
+        schemes=["B3", "HHZS"], workloads=[], arrivals=[],
+        drift_programs=[prog], ssd_zone_budgets=[20],
+        warmup=2.0, db_factory=db_factory, telemetry=telemetry)
+    return matrix.run(verbose=False)
+
+
+def test_rows_identical_with_telemetry_on_and_off():
+    """The telemetry sampler and the phase-boundary marker process ride
+    daemon timeouts — they must never perturb the measured rows."""
+    off = _matrix_rows(telemetry=False)
+    on = _matrix_rows(telemetry=True)
+    assert json.dumps(off, sort_keys=True) == json.dumps(on, sort_keys=True)
+
+
+def test_run_drift_deterministic_across_runs():
+    a, b = [], []
+    for dst in (a, b):
+        db, n = _loaded("HHZS", n=600)
+        dst.extend(r.to_json() for r in run_drift(
+            db, _two_phase(rate=15.0, phase_s=15.0), n_keys=n, seed=7))
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_timeline_carries_phase_marks():
+    db, n = _loaded("HHZS", n=600)
+    db.enable_telemetry(5.0)
+    run_drift(db, _two_phase(rate=15.0, phase_s=15.0), n_keys=n)
+    tl = db.metrics.timeline(meta={})
+    labels = [m["label"] for m in tl.get("marks", [])]
+    assert labels == ["phase:a", "phase:b"]
+
+
+# ---------------------------------------------------------------------
+# named programs + rankings
+# ---------------------------------------------------------------------
+def test_build_program_shapes():
+    p = build_program("rotate", svc=100.0, n_keys=1000,
+                      arrival_kind="bursty", phase_s=50.0)
+    assert p.name == "rotate~bursty"
+    assert [ph.name for ph in p.phases] == ["warm", "shift", "analytics",
+                                            "grow"]
+    assert p.duration == pytest.approx(200.0)
+    c = build_program("churn", svc=100.0, n_keys=1000)
+    assert [ph.name for ph in c.phases] == ["solo", "contend", "after"]
+    assert not c.live_in(c.phases[0], "batch")
+    assert c.live_in(c.phases[1], "batch")
+    with pytest.raises(ValueError):
+        build_program("nope", svc=1.0, n_keys=10)
+
+
+def _synth_row(scheme, p99s, measured=10):
+    return {"drift": "p", "arrival": "poisson(1)", "tenant": "t0",
+            "ssd_zones": 20, "scheme": scheme,
+            "phases": [{"phase": k, "name": f"ph{k}", "latency_p99": v,
+                        "throughput": 1.0, "n_measured": measured}
+                       for k, v in enumerate(p99s)]}
+
+
+def test_phase_rankings_and_flips():
+    """Default metric is the in-window tail (lower is better): per-phase
+    throughput is arrival-bound by construction, so it cannot rank."""
+    rows = [_synth_row("A1", [1.0, 10.0, 5.0]),
+            _synth_row("B2", [2.0, 5.0, 6.0])]
+    out = phase_rankings(rows)
+    (key, g), = out.items()
+    assert key == ("p", "poisson(1)", "t0", 20)
+    assert [p["ranking"] for p in g["phases"]] \
+        == [["A1", "B2"], ["B2", "A1"], ["A1", "B2"]]
+    assert g["flips"] == 2
+    assert rank_flips(rows) == {key: 2}
+
+
+def test_phase_rankings_throughput_metric_ranks_descending():
+    rows = [_synth_row("A1", [1.0]), _synth_row("B2", [2.0])]
+    rows[0]["phases"][0]["throughput"] = 5.0
+    rows[1]["phases"][0]["throughput"] = 9.0
+    (_, g), = phase_rankings(rows, metric="throughput").items()
+    assert g["phases"][0]["ranking"] == ["B2", "A1"]
+
+
+def test_phase_rankings_ties_break_by_scheme_name():
+    rows = [_synth_row("Z", [3.0]), _synth_row("A", [3.0])]
+    (_, g), = phase_rankings(rows).items()
+    assert g["phases"][0]["ranking"] == ["A", "Z"]
+
+
+def test_phase_rankings_skips_unmeasured_windows():
+    """A scheme whose window has no measured op (e.g. fully inside
+    warmup) must not "win" on an empty percentile of 0.0."""
+    rows = [_synth_row("A1", [3.0]), _synth_row("B2", [0.0], measured=0)]
+    (_, g), = phase_rankings(rows).items()
+    assert g["phases"][0]["ranking"] == ["A1"]

@@ -186,7 +186,7 @@ def test_hotspot_hot_set_moves():
 
 def test_hotspot_default_step_is_eighth_of_keyspace():
     spec = WorkloadSpec("hot", read=1.0, dist="hotspot",
-                        hotspot_period=50)     # hotspot_step left at 0
+                        hotspot_period=50)     # hotspot_step left at "auto"
     db = DB("HHZS", tiny_scenario(), store_values=True)
     st = OpStream(db, spec, n_ops=100, n_keys=800)
     assert st._hot_step == 100
